@@ -1,0 +1,74 @@
+"""Roofline table generator: reads the dry-run artifacts and renders the
+per-(arch × shape × mesh) table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(REPO, "artifacts", "dryrun")
+
+
+def load(mesh: str = "single") -> list[dict]:
+    d = os.path.join(ART, mesh)
+    rows = []
+    if not os.path.isdir(d):
+        return rows
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    hdr = ("| arch | shape | status | compute_s | memory_s | coll_s | "
+           "bottleneck | frac | useful | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                       f"— | — | — | — | — | — | — |\n")
+            continue
+        rf = r["roofline"]
+        fit = r.get("fits_hbm")
+        fit_s = {True: "yes", False: "NO", None: "?"}[fit]
+        useful = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{rf['compute_s']:.3g} | {rf['memory_s']:.3g} | "
+            f"{rf['collective_s']:.3g} | {rf['bottleneck']} | "
+            f"{rf['roofline_fraction']:.3f} | "
+            f"{useful:.2f} | {fit_s} |\n" if useful else
+            f"| {r['arch']} | {r['shape']} | ok | — | — | — | — | — | — "
+            f"| {fit_s} |\n")
+    return "".join(out)
+
+
+def run(quick: bool = False) -> dict:
+    single = load("single")
+    multi = load("multi")
+    ok_s = sum(1 for r in single if r["status"] == "ok")
+    sk_s = sum(1 for r in single if r["status"] == "skipped")
+    ok_m = sum(1 for r in multi if r["status"] == "ok")
+    sk_m = sum(1 for r in multi if r["status"] == "skipped")
+    bottl = {}
+    for r in single:
+        if r["status"] == "ok":
+            b = r["roofline"]["bottleneck"]
+            bottl[b] = bottl.get(b, 0) + 1
+    return {
+        "bench": "roofline_table",
+        "paper_analogue": "scale deliverable (40-cell baseline)",
+        "single_ok": ok_s, "single_skipped": sk_s,
+        "multi_ok": ok_m, "multi_skipped": sk_m,
+        "bottleneck_histogram": bottl,
+        "passed": (ok_s + sk_s >= 40) and (ok_m + sk_m >= 40),
+    }
+
+
+if __name__ == "__main__":
+    print(table("single"))
+    print(json.dumps(run(), indent=1))

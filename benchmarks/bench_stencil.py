@@ -1,0 +1,109 @@
+"""Paper §4.3 — framework-generated vs standalone hand-written CFD step.
+
+The paper's headline: the CaCUDA framework-generated kernels reached 58
+GFlop/s/node vs 43.5 for the hand-written standalone code (1.33x) — the
+template was better optimized than the hand code.  We reproduce the
+comparison structurally: the SAME Navier-Stokes step built (a) from
+descriptor-generated kernels through the full driver (halo exchange +
+overlap machinery) and (b) as a straight hand-written jnp implementation
+(the ref.py oracle path), both jitted, timed on identical states.
+
+On CPU the two converge to similar XLA programs — the claim reproduced is
+"the framework abstraction costs nothing (or less than nothing) relative
+to hand code", which is the transferable core of the paper's 58-vs-43.5
+result.  The roofline terms of the generated kernel on the TPU target
+are reported from the dry-run artifacts instead (see §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flops_per_step(shape, jacobi_iters):
+    """Analytic FLOPs of one projection step (see kernels/stencil3d.py)."""
+    cells = int(np.prod(shape))
+    upd = 90 * cells          # advection + diffusion, 3 components
+    div = 7 * cells
+    jac = 10 * cells * jacobi_iters
+    proj = 9 * cells
+    return upd + div + jac + proj
+
+
+def run(n: int = 64, steps: int = 40, quick: bool = False) -> dict:
+    from repro.cfd.ns3d import CFDConfig, NavierStokes3D
+    from repro.kernels import ref
+
+    if quick:
+        n, steps = 32, 15
+    cfg = CFDConfig(shape=(n, n, 16), case="taylor_green", nu=1e-3,
+                    dt=1e-3, jacobi_iters=20)
+
+    # (a) framework: descriptor-generated kernels + driver + overlap
+    solver = NavierStokes3D(cfg)
+    state = solver.init_state()
+    step_framework = solver.make_step()
+
+    # (b) standalone: hand-written jnp (the ref oracle path), same math,
+    # no descriptor/driver machinery — periodic pads written by hand
+    h, dt, nu, iters = cfg.h, cfg.dt, cfg.nu, cfg.jacobi_iters
+
+    def wrap(u, lo, hi):
+        return jnp.pad(u, [(lo, hi)] * 3, mode="wrap")
+
+    def step_standalone(state):
+        vx, vy, vz, p = (state[k] for k in ("vx", "vy", "vz", "p"))
+        vxs, vys, vzs = ref.update_velocity(
+            wrap(vx, 1, 1), wrap(vy, 1, 1), wrap(vz, 1, 1),
+            dt=dt, h=h, nu=nu)
+        rhs = ref.divergence(wrap(vxs, 1, 0), wrap(vys, 1, 0),
+                             wrap(vzs, 1, 0), h=h) / dt
+
+        def body(_, pc):
+            return ref.jacobi_pressure(wrap(pc, 1, 1), rhs, h=h)
+
+        p = jax.lax.fori_loop(0, iters, body, p)
+        p = p - jnp.mean(p)
+        vxn, vyn, vzn = ref.project_velocity(vxs, vys, vzs, wrap(p, 0, 1),
+                                             dt=dt, h=h)
+        return dict(state, vx=vxn, vy=vyn, vz=vzn, p=p)
+
+    step_standalone = jax.jit(step_standalone)
+
+    def bench(step, state):
+        state = step(state)                       # compile + warm
+        jax.block_until_ready(state["vx"])
+        t0 = time.time()
+        for _ in range(steps):
+            state = step(state)
+        jax.block_until_ready(state["vx"])
+        return (time.time() - t0) / steps, state
+
+    t_fw, s_fw = bench(step_framework, state)
+    t_sa, s_sa = bench(step_standalone, state)
+    # numerical agreement (same discretization)
+    du = float(jnp.abs(s_fw["vx"] - s_sa["vx"]).max())
+
+    flops = _flops_per_step(cfg.shape, cfg.jacobi_iters)
+    return {
+        "bench": "stencil_framework_vs_standalone",
+        "paper_analogue": "§4.3 (58 vs 43.5 GFlop/s per node)",
+        "grid": f"{n}x{n}x16",
+        "framework_ms_per_step": round(t_fw * 1e3, 2),
+        "standalone_ms_per_step": round(t_sa * 1e3, 2),
+        "framework_gflops": round(flops / t_fw / 1e9, 2),
+        "standalone_gflops": round(flops / t_sa / 1e9, 2),
+        "framework_over_standalone": round(t_sa / t_fw, 3),
+        "paper_ratio": round(58.0 / 43.5, 3),
+        "max_field_deviation": du,
+        "passed": bool(du < 1e-4 and t_fw < 3.0 * t_sa),
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,47 @@
+"""Benchmark harness: one bench per paper table/figure + the roofline
+deliverable.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only cavity,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+BENCHES = ["stencil", "cavity", "scaling", "roofline"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else BENCHES
+
+    results = []
+    for name in names:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"=== bench_{name} ===", flush=True)
+        try:
+            res = mod.run(quick=args.quick)
+            res["wall_s"] = res.get("wall_s", round(time.time() - t0, 1))
+        except Exception as e:  # pragma: no cover
+            res = {"bench": name, "passed": False,
+                   "error": f"{type(e).__name__}: {e}"}
+        print(json.dumps(res, indent=1, default=str), flush=True)
+        results.append(res)
+
+    n_pass = sum(1 for r in results if r.get("passed"))
+    print(f"\n[benchmarks] {n_pass}/{len(results)} passed")
+    if n_pass < len(results):
+        for r in results:
+            if not r.get("passed"):
+                print(f"  FAILED: {r['bench']}: {r.get('error', '')}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end driver: lid-driven cavity at Re=100, validated against Ghia
+et al. (1982) — the paper's own demonstration application (its Fig. 3),
+several hundred solver steps through the full framework stack
+(descriptor-generated kernels, driver halo exchange, comm/compute
+overlap, Method-of-Lines stepping).
+
+Run:  PYTHONPATH=src python examples/cavity_flow.py [--n 48] [--t-end 12]
+"""
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--t-end", type=float, default=12.0)
+    args = ap.parse_args()
+
+    from repro.cfd import cavity
+
+    print(f"lid-driven cavity Re=100, {args.n}^2 grid, t_end={args.t_end}")
+    solver, state, errors = cavity.run(n=args.n, t_end=args.t_end,
+                                       progress=200)
+    print(f"steps: {int(args.t_end / solver.config.dt)}")
+    print(f"Ghia centerline deviation: u_rms={errors['u_rms']:.4f} "
+          f"v_rms={errors['v_rms']:.4f}")
+
+    # ASCII profile: u(y) through the vertical centerline vs Ghia points
+    y, u = cavity.centerline_u(solver, state)
+    print("\n  u(y) at x=0.5   (*=ours, o=Ghia)")
+    for gy, gu in cavity.GHIA_RE100_U[1:-1]:
+        ui = float(np.interp(gy, y, u))
+        col = int((ui + 0.4) / 1.4 * 58)
+        gcol = int((gu + 0.4) / 1.4 * 58)
+        line = [" "] * 60
+        line[min(max(gcol, 0), 59)] = "o"
+        line[min(max(col, 0), 59)] = "*"
+        print(f"  y={gy:5.3f} |{''.join(line)}|")
+    ok = errors["u_rms"] < 0.035 and errors["v_rms"] < 0.035
+    print("\nVALIDATION", "PASSED" if ok else "FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Define a NEW kernel from the paper's own declarative syntax: parse a
+``cacuda.ccl`` text block (paper Listing 1 format) and run the generated
+kernel — the extensibility story of the CaCUDA abstraction.
+
+Run:  PYTHONPATH=src python examples/custom_kernel.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate, parse_ccl
+
+CCL = """
+CCTK_CUDA_KERNEL GRADIENT_MAG
+  TYPE=3DBLOCK
+  STENCIL="1,1,1,1,1,1"
+  TILE="8,8,8"
+{
+  CCTK_CUDA_KERNEL_VARIABLE CACHED=YES INTENT=IN
+  {
+    phi
+  } "SCALAR_FIELD"
+  CCTK_CUDA_KERNEL_VARIABLE INTENT=OUT
+  {
+    gmag
+  } "GRADIENT_MAGNITUDE"
+  CCTK_CUDA_KERNEL_PARAMETER
+  {
+    h
+  } "SPACING"
+}
+"""
+
+
+def main():
+    desc = parse_ccl(CCL)[0]
+    print(f"parsed descriptor: {desc.name}, stencil={desc.stencil}, "
+          f"tile={desc.tile}")
+    print(f"  variables: {[g.names for g in desc.variables]}")
+
+    def body(ctx):
+        phi = ctx["phi"]
+        h = ctx.param("h")
+        gx = (phi.at(1, 0, 0) - phi.at(-1, 0, 0)) / (2 * h)
+        gy = (phi.at(0, 1, 0) - phi.at(0, -1, 0)) / (2 * h)
+        gz = (phi.at(0, 0, 1) - phi.at(0, 0, -1)) / (2 * h)
+        return {"gmag": jnp.sqrt(gx * gx + gy * gy + gz * gz)}
+
+    kernel = generate(desc, body, template="JNP")
+    # also validate through the Pallas 3DBLOCK template in interpret mode
+    kernel_pallas = generate(desc, body, template="3DBLOCK", interpret=True)
+
+    n = 24
+    x = jnp.linspace(0, 1, n + 2)
+    phi = (x[:, None, None] ** 2 + x[None, :, None]
+           + 0 * x[None, None, :]) * jnp.ones((n + 2, n + 2, n + 2))
+    h = float(x[1] - x[0])
+    out_jnp = kernel({"phi": phi}, h=h)["gmag"]
+    out_pl = kernel_pallas({"phi": phi}, h=h)["gmag"]
+    err = float(jnp.abs(out_jnp - out_pl).max())
+    print(f"JNP vs Pallas(3DBLOCK, interpret) max err: {err:.2e}")
+    assert err < 1e-5
+    # analytic: |grad| = sqrt((2x)^2 + 1)
+    xc = x[1:-1]
+    expect = jnp.sqrt((2 * xc[:, None, None]) ** 2 + 1.0)
+    mid_err = float(jnp.abs(out_jnp - expect).mean())
+    print(f"mean deviation from analytic gradient: {mid_err:.4f}")
+    print("OK — new kernel from .ccl text, validated on both templates.")
+
+
+if __name__ == "__main__":
+    main()

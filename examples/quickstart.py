@@ -1,0 +1,63 @@
+"""Quickstart: the paper's abstraction stack in five minutes.
+
+1. declare a stencil kernel with a CaCUDA descriptor (paper Listing 1)
+2. the generator expands it against a template (Pallas 3DBLOCK on TPU,
+   fused-jnp elsewhere)
+3. the driver decomposes the domain and fills ghost zones
+4. run a few diffusion steps — with communication/computation overlap
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import descriptor, generate
+from repro.core.halo import AxisSpec, bc_neumann, exchange_pad
+
+
+def main():
+    # -- 1. declare the kernel (the cacuda.ccl equivalent) -------------------
+    DIFFUSE = descriptor(
+        "DIFFUSE",
+        stencil=(1, 1, 1, 1, 1, 1),
+        tile=(8, 8, 8),
+        u=dict(names=("u",), intent="SEPARATEINOUT", cached=True),
+        parameters=("dt", "h", "nu"),
+    )
+
+    # -- 2. give the per-cell update; the generator builds the kernel --------
+    def body(ctx):
+        u = ctx["u"]
+        h, dt, nu = ctx.param("h"), ctx.param("dt"), ctx.param("nu")
+        lap = (u.at(1, 0, 0) + u.at(-1, 0, 0) + u.at(0, 1, 0)
+               + u.at(0, -1, 0) + u.at(0, 0, 1) + u.at(0, 0, -1)
+               - 6.0 * u.c) / h ** 2
+        return {"u": u.c + dt * nu * lap}
+
+    kernel = generate(DIFFUSE, body, template="JNP")  # "3DBLOCK" on TPU
+
+    # -- 3. domain + ghost exchange -------------------------------------------
+    n = 32
+    u = jnp.zeros((n, n, n)).at[n // 2, n // 2, n // 2].set(1.0)
+    specs = [AxisSpec(array_axis=i, bc_lo=bc_neumann(), bc_hi=bc_neumann())
+             for i in range(3)]
+
+    # -- 4. step ------------------------------------------------------------------
+    @jax.jit
+    def step(u):
+        padded = exchange_pad(u, (1, 1, 1), specs)
+        return kernel({"u": padded}, dt=0.1, h=1.0, nu=1.0)["u"]
+
+    total0 = float(u.sum())
+    for i in range(50):
+        u = step(u)
+    total1 = float(u.sum())
+    print(f"diffused peak: {float(u.max()):.5f} (from 1.0)")
+    print(f"mass conserved: {total0:.6f} -> {total1:.6f}")
+    assert abs(total1 - total0) < 1e-3
+    print("OK — descriptor -> generated kernel -> driver halo -> stepped.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, paper-table dims
+[arXiv:2501.kimi2; unverified].  61L d_model=7168 64H (GQA kv=8)
+d_ff=2048 (expert width) vocab=163840, MoE 384 experts top-8 + 1 shared.
+
+Per the assignment's [unverified] tier we use standard GQA (not MLA).
+bf16 params — at 1T params the fp32-master scheme does not fit 512×16GB;
+see optim/adamw.py dtype knobs + EXPERIMENTS.md §Dry-run.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        num_layers=61,
+        d_model=7168,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=2048,
+        vocab_size=163_840,
+        num_experts=384,
+        num_experts_per_tok=8,
+        num_shared_experts=1,
+        rope_theta=50_000.0,
+        param_dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: a massively data-parallel stencil
+computation framework (Cactus/CaCUDA) retargeted to JAX on TPU pods.
+
+Public surface:
+  descriptor.StencilDescriptor / descriptor()  — CaCUDA kernel descriptors
+  ccl.parse_ccl                                — the cacuda.ccl text syntax
+  generator.generate                           — descriptor -> Pallas/JNP kernel
+  halo.exchange_pad / stencil_step_overlap     — ghost-zone exchange + overlap
+  driver.GridDriver / Domain                   — domain decomposition driver
+  mol                                          — Method of Lines integrators
+  schedule.Schedule                            — schedule tree
+  autotune.choose_tile                         — roofline-driven TILE tuning
+"""
+from repro.core.descriptor import Intent, StencilDescriptor, VariableGroup, descriptor
+from repro.core.ccl import parse_ccl, parse_ccl_file
+from repro.core.generator import FieldView, GeneratedKernel, KernelContext, generate, generate_pair
+from repro.core.halo import (
+    AxisSpec,
+    bc_dirichlet,
+    bc_mirror,
+    bc_neumann,
+    exchange_pad,
+    stencil_step_overlap,
+)
+from repro.core.driver import Domain, GridDriver
+from repro.core import mol
+from repro.core.schedule import Schedule
+from repro.core.autotune import choose_tile, tuned
+from repro.core.rooflinemodel import V5E, RooflineTerms, terms_from_counts

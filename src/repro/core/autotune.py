@@ -1,0 +1,77 @@
+"""Tile autotuner: pick the 3DBLOCK tile from the roofline model.
+
+The paper auto-tunes data distribution and relies on hand-tuned TILE choices
+in the descriptors.  On TPU we can do better: enumerate hardware-aligned
+candidate tiles, keep those whose staged working set fits the VMEM budget,
+and maximize arithmetic intensity (halo amortization).  Deterministic — no
+on-device search — so it is usable at trace time and in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.descriptor import Intent, StencilDescriptor
+from repro.core.rooflinemodel import V5E, Chip, stencil_arithmetic_intensity
+
+# VPU lanes/sublanes: last dim multiples of 128, second-to-last multiples of 8
+_LANE = 128
+_SUBLANE = 8
+
+
+def _divisors(n: int, step: int) -> list[int]:
+    return [d for d in range(step, n + 1, step) if n % d == 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    tile: tuple[int, int, int]
+    vmem_bytes: int
+    intensity: float
+
+
+def choose_tile(
+    desc: StencilDescriptor,
+    local_shape: tuple[int, int, int],
+    *,
+    itemsize: int = 4,
+    flops_per_cell: float = 10.0,
+    chip: Chip = V5E,
+    vmem_fraction: float = 0.5,
+) -> TileChoice:
+    """Best aligned tile dividing ``local_shape`` that fits the VMEM budget."""
+    nx, ny, nz = local_shape
+    budget = chip.vmem_bytes * vmem_fraction
+    nread = len(desc.inputs)
+    nwrite = len(desc.outputs)
+    halo = desc.halo_width
+
+    best: TileChoice | None = None
+    zc = _divisors(nz, _LANE) or [nz]
+    yc = _divisors(ny, _SUBLANE) or _divisors(ny, 1)
+    xc = _divisors(nx, 1)
+    for tz in zc:
+        for ty in yc:
+            for tx in xc:
+                d2 = dataclasses.replace(desc, tile=(tx, ty, tz))
+                vmem = d2.vmem_block_bytes(itemsize)
+                if vmem > budget:
+                    continue
+                ai = stencil_arithmetic_intensity(
+                    (tx, ty, tz), halo, flops_per_cell, nread, nwrite, itemsize
+                )
+                cand = TileChoice((tx, ty, tz), vmem, ai)
+                if best is None or cand.intensity > best.intensity or (
+                    cand.intensity == best.intensity and vmem < best.vmem_bytes
+                ):
+                    best = cand
+    if best is None:
+        raise ValueError(
+            f"no tile of {local_shape} fits VMEM budget {budget:.0f}B "
+            f"for kernel {desc.name}"
+        )
+    return best
+
+
+def tuned(desc: StencilDescriptor, local_shape, **kw) -> StencilDescriptor:
+    """Return the descriptor with its TILE replaced by the tuned choice."""
+    return dataclasses.replace(desc, tile=choose_tile(desc, local_shape, **kw).tile)

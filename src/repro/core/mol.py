@@ -1,0 +1,60 @@
+"""Method of Lines time integrators (the Cactus MoL thorn analogue).
+
+Explicit Runge-Kutta integrators over arbitrary pytrees of state, as provided
+to Cactus applications by the MoL thorn.  ``rhs(y, t) -> dy/dt`` is supplied
+by the application (e.g. the CFD momentum equation); integrators are pure and
+jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+T = TypeVar("T")
+RHS = Callable[[T, jnp.ndarray], T]
+
+_tm = jax.tree_util.tree_map
+
+
+def _axpy(a: float, x: T, y: T) -> T:
+    return _tm(lambda xi, yi: a * xi + yi, x, y)
+
+
+def euler(rhs: RHS, y: T, t, dt) -> T:
+    return _axpy(dt, rhs(y, t), y)
+
+
+def rk2(rhs: RHS, y: T, t, dt) -> T:
+    """Heun's method (SSP-RK2)."""
+    k1 = rhs(y, t)
+    y1 = _axpy(dt, k1, y)
+    k2 = rhs(y1, t + dt)
+    return _tm(lambda yi, a, b: yi + 0.5 * dt * (a + b), y, k1, k2)
+
+
+def rk3_ssp(rhs: RHS, y: T, t, dt) -> T:
+    """Shu-Osher strong-stability-preserving RK3 (standard for advection)."""
+    k1 = rhs(y, t)
+    y1 = _axpy(dt, k1, y)
+    k2 = rhs(y1, t + dt)
+    y2 = _tm(lambda yi, y1i, ki: 0.75 * yi + 0.25 * (y1i + dt * ki), y, y1, k2)
+    k3 = rhs(y2, t + 0.5 * dt)
+    return _tm(
+        lambda yi, y2i, ki: yi / 3.0 + (2.0 / 3.0) * (y2i + dt * ki), y, y2, k3
+    )
+
+
+def rk4(rhs: RHS, y: T, t, dt) -> T:
+    k1 = rhs(y, t)
+    k2 = rhs(_axpy(0.5 * dt, k1, y), t + 0.5 * dt)
+    k3 = rhs(_axpy(0.5 * dt, k2, y), t + 0.5 * dt)
+    k4 = rhs(_axpy(dt, k3, y), t + dt)
+    return _tm(
+        lambda yi, a, b, c, d: yi + (dt / 6.0) * (a + 2 * b + 2 * c + d),
+        y, k1, k2, k3, k4,
+    )
+
+
+INTEGRATORS = {"euler": euler, "rk2": rk2, "rk3": rk3_ssp, "rk4": rk4}

@@ -1,0 +1,100 @@
+"""TPU v5e roofline model: hardware constants + term computation.
+
+Used by the tile autotuner (napkin math before lowering), the dry-run
+analyzer (terms from compiled HLO), and the benchmark harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12   # FLOP/s
+    peak_flops_fp32: float = 98.5e12  # MXU fp32 ~ half bf16
+    hbm_bandwidth: float = 819e9      # B/s
+    hbm_bytes: float = 16e9
+    ici_link_bandwidth: float = 50e9  # B/s per link (~ per direction)
+    ici_links: int = 4                # 2D torus: ±x, ±y
+    vmem_bytes: float = 128 * 2**20
+
+    def peak_flops(self, dtype: str = "bf16") -> float:
+        return self.peak_flops_bf16 if dtype in ("bf16", "bfloat16") else self.peak_flops_fp32
+
+
+V5E = Chip()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-device seconds for each roofline term; bottleneck = max."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: perfectly overlapped terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of roofline: 1.0 = pure compute-bound at peak."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.compute_fraction,
+        }
+
+
+def terms_from_counts(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    collective_bytes_per_device: float,
+    *,
+    dtype: str = "bf16",
+    chip: Chip = V5E,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / chip.peak_flops(dtype),
+        memory_s=hbm_bytes_per_device / chip.hbm_bandwidth,
+        collective_s=collective_bytes_per_device / chip.ici_link_bandwidth,
+    )
+
+
+def stencil_arithmetic_intensity(
+    tile: tuple[int, int, int],
+    halo: tuple[int, int, int],
+    flops_per_cell: float,
+    nvars_read: int,
+    nvars_written: int,
+    itemsize: int = 4,
+) -> float:
+    """FLOP/byte of one halo-expanded tile — drives tile autotuning.
+
+    Larger tiles amortize the halo re-read; this is the TPU analogue of the
+    paper's shared-memory tile-size tuning.
+    """
+    tx, ty, tz = tile
+    hx, hy, hz = halo
+    cells = tx * ty * tz
+    read = (tx + 2 * hx) * (ty + 2 * hy) * (tz + 2 * hz) * nvars_read
+    written = cells * nvars_written
+    return (cells * flops_per_cell) / ((read + written) * itemsize)

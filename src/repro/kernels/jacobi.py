@@ -1,0 +1,85 @@
+"""Communication-avoiding fused Jacobi smoother (beyond-paper optimization).
+
+The paper's CFD code spends most of its time in the pressure Poisson solve,
+and its scalability section identifies boundary exchange as the cost to
+minimize.  A TPU-native improvement over exchanging every sweep: widen the
+ghost region to ``k`` cells and fuse ``k`` Jacobi sweeps into one kernel
+launch — each sweep consumes one ghost ring, so one halo exchange (width k)
+feeds k sweeps.  This divides the collective *count* (latency) by k and cuts
+exchanged bytes for k>2, at the cost of O(k·ring) redundant flops — the
+classic communication-avoiding smoother trade, which favors TPU's
+compute-rich/ICI-bound balance.
+
+Both a Pallas 3DBLOCK version (VMEM-resident tile across all k sweeps — the
+intermediate sweeps never touch HBM) and a shape-polymorphic jnp version
+(oracle + boundary-shell path) are provided.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax._src.pallas.core import Element
+
+
+def _sweep(p, rhs, h2, omega):
+    """One weighted-Jacobi sweep; p padded by 1 relative to output, rhs
+    padded to match p (its outer ring is unused)."""
+    nbr = (p[2:, 1:-1, 1:-1] + p[:-2, 1:-1, 1:-1]
+           + p[1:-1, 2:, 1:-1] + p[1:-1, :-2, 1:-1]
+           + p[1:-1, 1:-1, 2:] + p[1:-1, 1:-1, :-2])
+    jac = (nbr - h2 * rhs[1:-1, 1:-1, 1:-1]) / 6.0
+    return (1.0 - omega) * p[1:-1, 1:-1, 1:-1] + omega * jac
+
+
+def jacobi_fused_ref(p, rhs, *, h, omega=1.0, sweeps=1):
+    """jnp oracle: k fused sweeps; p and rhs padded by ``sweeps`` cells."""
+    h2 = h * h
+    for _ in range(sweeps):
+        p = _sweep(p, rhs, h2, omega)
+        rhs = rhs[1:-1, 1:-1, 1:-1]
+    return p
+
+
+def _fused_body(p_ref, rhs_ref, o_ref, *, h2, omega, sweeps):
+    p = p_ref[...].astype(jnp.float32)
+    rhs = rhs_ref[...].astype(jnp.float32)
+    for _ in range(sweeps):
+        p = _sweep(p, rhs, h2, omega)
+        rhs = rhs[1:-1, 1:-1, 1:-1]
+    o_ref[...] = p.astype(o_ref.dtype)
+
+
+def jacobi_fused(
+    p: jnp.ndarray,
+    rhs: jnp.ndarray,
+    *,
+    h: float,
+    omega: float = 1.0,
+    sweeps: int = 1,
+    tile: tuple[int, int, int] = (8, 8, 8),
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas: k sweeps, one launch; inputs padded by ``sweeps`` per axis."""
+    k = sweeps
+    interior = tuple(s - 2 * k for s in p.shape)
+    tx, ty, tz = (min(t, n) for t, n in zip(tile, interior))
+    if any(n % t for n, t in zip(interior, (tx, ty, tz))):
+        raise ValueError(f"interior {interior} not divisible by tile {(tx, ty, tz)}")
+    grid = (interior[0] // tx, interior[1] // ty, interior[2] // tz)
+    halo_spec = pl.BlockSpec(
+        (Element(tx + 2 * k), Element(ty + 2 * k), Element(tz + 2 * k)),
+        lambda i, j, l: (i * tx, j * ty, l * tz),
+    )
+    out_spec = pl.BlockSpec((tx, ty, tz), lambda i, j, l: (i, j, l))
+    body = functools.partial(_fused_body, h2=h * h, omega=omega, sweeps=k)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[halo_spec, halo_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(interior, p.dtype),
+        interpret=interpret,
+    )(p, rhs)

@@ -1,0 +1,91 @@
+"""jit'd public wrappers around the kernels in this package.
+
+Each op dispatches between the Pallas 3DBLOCK template (TPU; interpret mode
+for CPU validation) and the fused-jnp template (the XLA path used on CPU and
+inside boundary shells).  The CFD solver and the LM stack call these — never
+``pallas_call`` directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.generator import generate
+from repro.kernels import stencil3d
+from repro.kernels.attention import flash_attention
+from repro.kernels.jacobi import jacobi_fused, jacobi_fused_ref
+
+
+def default_template() -> str:
+    """3DBLOCK on TPU, JNP elsewhere (dry-run/CPU/test default)."""
+    return "3DBLOCK" if jax.default_backend() == "tpu" else "JNP"
+
+
+@functools.lru_cache(maxsize=None)
+def _kernel(name: str, template: str, interpret: bool, tile: tuple | None):
+    desc = stencil3d.DESCRIPTORS[name]
+    if tile is not None:
+        import dataclasses
+
+        desc = dataclasses.replace(desc, tile=tile)
+    return generate(desc, stencil3d.BODIES[name], template=template,
+                    interpret=interpret)
+
+
+def apply_kernel(name: str, arrays: dict, *, template: str | None = None,
+                 interpret: bool = False, tile: tuple | None = None, **params):
+    tmpl = template or default_template()
+    return _kernel(name, tmpl, interpret, tile)(arrays, **params)
+
+
+# -- convenience wrappers (the public op surface) ---------------------------
+def update_velocity(vx, vy, vz, *, dt, h, nu, fx=0.0, fy=0.0, fz=0.0, **kw):
+    out = apply_kernel(
+        "UPDATE_VELOCITY", {"vx": vx, "vy": vy, "vz": vz},
+        dt=dt, h=h, nu=nu, fx=fx, fy=fy, fz=fz, **kw)
+    return out["vx"], out["vy"], out["vz"]
+
+
+def divergence(vx, vy, vz, *, h, **kw):
+    return apply_kernel("DIVERGENCE", {"vx": vx, "vy": vy, "vz": vz}, h=h, **kw)["div"]
+
+
+def jacobi_pressure(p, rhs, *, h, omega=1.0, **kw):
+    return apply_kernel("JACOBI_PRESSURE", {"p": p, "rhs": rhs},
+                        h=h, omega=omega, **kw)["p"]
+
+
+def project_velocity(vx, vy, vz, p, *, dt, h, **kw):
+    out = apply_kernel(
+        "PROJECT_VELOCITY", {"vx": vx, "vy": vy, "vz": vz, "p": p},
+        dt=dt, h=h, **kw)
+    return out["vx"], out["vy"], out["vz"]
+
+
+def jacobi_smooth(p, rhs, *, h, omega=1.0, sweeps=1, template=None,
+                  interpret=False, tile=(8, 8, 8)):
+    """Communication-avoiding fused smoother; inputs padded by ``sweeps``."""
+    tmpl = template or default_template()
+    if tmpl == "JNP":
+        return jacobi_fused_ref(p, rhs, h=h, omega=omega, sweeps=sweeps)
+    return jacobi_fused(p, rhs, h=h, omega=omega, sweeps=sweeps, tile=tile,
+                        interpret=interpret)
+
+
+def mha(q, k, v, *, causal=True, q_offset=0, template=None, interpret=False,
+        block_q=128, block_k=128):
+    """Attention hot-spot: Pallas flash kernel on TPU, else chunked XLA.
+
+    q: (H, Sq, D); k/v: (Hkv, Sk, D).
+    """
+    tmpl = template or default_template()
+    if tmpl == "3DBLOCK":
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    from repro.models.attention import chunked_mha  # lazy: avoid cycle
+
+    return chunked_mha(q, k, v, causal=causal, q_offset=q_offset,
+                       chunk=block_k)

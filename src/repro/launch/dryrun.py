@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+real shardings on the production mesh, and extract memory/cost/collective
+analysis — the proof that the distribution config is coherent without real
+hardware.  (The XLA_FLAGS line above MUST precede any jax import: jax locks
+the backend device count at first initialization.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.dist import sharding as shd
+from repro.launch.hlo_analysis import cost_summary
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW
+from repro.train import step as step_lib
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# per-arch training plan (microbatching + optimizer dtypes at scale)
+# ---------------------------------------------------------------------------
+def train_plan(cfg: ModelConfig) -> dict:
+    big = cfg.d_model >= 4096 or cfg.num_experts >= 128
+    return {
+        # grad_accum splits global batch 256 into microbatches; bigger models
+        # hold fewer live tokens per device (activation budget)
+        "grad_accum": 16 if big else 4,
+        # bf16 moments at >=8B params (see optim/adamw.py docstring)
+        "m_dtype": jnp.bfloat16 if big else jnp.float32,
+        "v_dtype": jnp.bfloat16 if big else jnp.float32,
+        # layout posture (see dist.sharding.make_shard_cfg); baseline is the
+        # big-model 2-D layout for every arch — §Perf tunes this per cell
+        "shard_mode": "fsdp_tp",
+    }
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model inputs for one cell, as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {}
+        if cfg.family == "audio":
+            batch["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        elif cfg.family == "vlm":
+            text = s - cfg.num_prefix_tokens
+            batch["tokens"] = _sds((b, text), i32)
+            batch["prefix_embeds"] = _sds(
+                (b, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((b, s), i32)
+        tgt_len = s if cfg.family != "vlm" else s - cfg.num_prefix_tokens
+        batch["targets"] = _sds((b, tgt_len), i32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.family == "audio":
+            batch["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        elif cfg.family == "vlm":
+            batch["tokens"] = _sds((b, s - cfg.num_prefix_tokens), i32)
+            batch["prefix_embeds"] = _sds(
+                (b, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((b, s), i32)
+        return batch
+    if shape.kind == "decode":
+        return {"token": _sds((b, 1), i32)}
+    raise ValueError(shape.kind)
+
+
+def _shapes_of(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, *, moe_mode="tp",
+               cfg_overrides=None, plan_overrides=None, ssm_sp=False):
+    """Returns (jitted_fn, arg_shape_structs) ready to .lower().
+
+    ``cfg_overrides``/``plan_overrides`` are the §Perf hillclimb knobs
+    (remat policy, chunk sizes, grad_accum, optimizer dtypes, ...).
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    shard_mode = (plan_overrides or {}).get("shard_mode", "fsdp_tp")
+    shard = shd.make_shard_cfg(mesh, cfg, global_batch=shape.global_batch,
+                               moe_mode=moe_mode if cfg.num_experts else "tp",
+                               ssm_sp=ssm_sp, mode=shard_mode)
+    named = lambda tree: shd.named(tree, mesh)
+
+    params_s = _shapes_of(lambda: model.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = shd.param_spec_tree(params_s, cfg, mesh, shard)
+    batch = input_specs(cfg, shape)
+    bspecs = shd.batch_spec_tree(batch, mesh, shard)
+
+    if shape.kind == "train":
+        plan = train_plan(cfg)
+        if plan_overrides:
+            plan.update(plan_overrides)
+        opt = AdamW(m_dtype=plan["m_dtype"], v_dtype=plan["v_dtype"])
+        opt_s = _shapes_of(opt.init, params_s)
+        ospecs = opt.state_spec_tree(pspecs)
+        fn = step_lib.make_train_step(cfg, shard, opt,
+                                      grad_accum=plan["grad_accum"])
+        jitted = jax.jit(
+            fn,
+            in_shardings=(named(pspecs), named(ospecs), named(bspecs)),
+            out_shardings=(named(pspecs), named(ospecs), None),
+            donate_argnums=(0, 1))
+        return jitted, (params_s, opt_s, batch), shard, cfg, shape
+
+    # serving cells: cache max length = shape.seq_len
+    cache_dtype = (plan_overrides or {}).get("cache_dtype", jnp.bfloat16)
+    caches_s = _shapes_of(
+        lambda: model.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                  cache_dtype))
+    cspecs = shd.cache_spec_tree(caches_s, cfg, mesh, shard)
+
+    if shape.kind == "prefill":
+        fn = step_lib.make_prefill_step(cfg, shard)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(named(pspecs), named(bspecs), named(cspecs)),
+            out_shardings=(None, named(cspecs)),
+            donate_argnums=(2,))
+        return jitted, (params_s, batch, caches_s), shard, cfg, shape
+
+    if shape.kind == "decode":
+        fn = step_lib.make_serve_step(cfg, shard)
+        cache_len = _sds((), jnp.int32)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(named(pspecs), named(bspecs)["token"],
+                          named(cspecs), NamedSharding(mesh, P())),
+            out_shardings=(None, None, named(cspecs)),
+            donate_argnums=(2,))
+        return jitted, (params_s, batch["token"], caches_s, cache_len), \
+            shard, cfg, shape
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             moe_mode="tp", verbose=True, mesh=None, cfg_overrides=None,
+             plan_overrides=None, ssm_sp=False) -> dict:
+    multi = mesh_kind == "multi"
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.size
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    art = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape), "kind": shape.kind,
+           "moe_mode": moe_mode}
+    if cfg_overrides:
+        art["cfg_overrides"] = {k: str(v) for k, v in cfg_overrides.items()}
+    if plan_overrides:
+        art["plan_overrides"] = {k: str(v) for k, v in plan_overrides.items()}
+    if ssm_sp:
+        art["ssm_sp"] = True
+    if not applicable(cfg, shape):
+        art["status"] = "skipped"
+        art["reason"] = ("long_500k requires sub-quadratic sequence mixing; "
+                        f"{arch} is full-attention (see DESIGN.md)")
+        return art
+    t0 = time.time()
+    try:
+        jitted, args, shard, cfg, shape = build_cell(
+            arch, shape_name, mesh, moe_mode=moe_mode,
+            cfg_overrides=cfg_overrides, plan_overrides=plan_overrides,
+            ssm_sp=ssm_sp)
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        summary = cost_summary(compiled, n_dev)
+        art.update(summary)
+        art["status"] = "ok"
+        art["lower_s"] = round(t1 - t0, 2)
+        art["compile_s"] = round(t2 - t1, 2)
+        # MODEL_FLOPS usefulness ratio
+        n_active = cfg.active_param_count()
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * n_active * tokens
+        art["n_params"] = cfg.param_count()
+        art["n_active_params"] = n_active
+        art["model_flops_global"] = float(model_flops)
+        art["model_flops_per_device"] = float(model_flops) / n_dev
+        hlo_f = summary["flops_per_device"]
+        art["useful_flops_ratio"] = (art["model_flops_per_device"] / hlo_f
+                                     if hlo_f else None)
+        # roofline terms
+        from repro.core.rooflinemodel import V5E, terms_from_counts
+
+        terms = terms_from_counts(
+            hlo_f, summary["hbm_bytes_per_device"],
+            summary["collective_wire_bytes_per_device"])
+        art["roofline"] = terms.as_dict()
+        # fit check vs v5e HBM
+        peak = (summary.get("memory") or {}).get("peak_bytes")
+        arg_b = (summary.get("memory") or {}).get("argument_bytes")
+        art["fits_hbm"] = (None if peak is None
+                           else bool((peak or 0) + (arg_b or 0) <= V5E.hbm_bytes))
+    except Exception as e:
+        art["status"] = "error"
+        art["error"] = f"{type(e).__name__}: {e}"
+        art["traceback"] = traceback.format_exc()[-4000:]
+    art["total_s"] = round(time.time() - t0, 2)
+    if verbose:
+        tag = art["status"]
+        extra = ""
+        if tag == "ok":
+            r = art["roofline"]
+            extra = (f" bottleneck={r['bottleneck']}"
+                     f" frac={r['roofline_fraction']:.3f}"
+                     f" compile={art['compile_s']}s")
+        print(f"[dryrun {mesh_kind}] {arch} × {shape_name}: {tag}{extra}",
+              flush=True)
+    return art
+
+
+def save_artifact(art: dict, out_dir: str):
+    d = os.path.join(out_dir, art["mesh"])
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{art['arch']}__{art['shape']}.json")
+    slim = {k: v for k, v in art.items() if k != "traceback"}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1, default=str)
+    if art.get("traceback"):
+        with open(path + ".err", "w") as f:
+            f.write(art["traceback"])
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-mode", default="tp", choices=["tp", "a2a"])
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                art = run_cell(arch, shape, mesh_kind,
+                               moe_mode=args.moe_mode)
+                save_artifact(art, args.out)
+                if art["status"] == "error":
+                    failures += 1
+                    print(art["error"], flush=True)
+    print(f"dryrun complete; {failures} failures", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

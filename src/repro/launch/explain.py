@@ -1,0 +1,125 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb diagnostics: lower one cell (with optional knob overrides) and
+print the roofline terms, per-opcode byte attribution, the most expensive
+computations (per-iteration cost × trip), and the biggest charged reads
+inside a chosen computation — the dry-run "profiler".
+
+    PYTHONPATH=src python -m repro.launch.explain --arch xlstm-125m \
+        --shape train_4k [--set remat=none] [--plan grad_accum=4] [--ssm-sp]
+"""
+import argparse
+import json
+from collections import defaultdict
+
+
+def parse_kv(items):
+    out = {}
+    for kv in items or []:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "true"):
+            v = True
+        if v in ("False", "false"):
+            v = False
+        out[k] = v
+    return out
+
+
+def explain(arch, shape, mesh_kind="single", *, moe_mode="tp",
+            cfg_overrides=None, plan_overrides=None, ssm_sp=False,
+            top=6, drill=None, mesh=None):
+    import jax
+
+    from repro.launch import dryrun, hlo_cost
+    from repro.launch.mesh import make_production_mesh
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    jitted, args, shard, cfg, shp = dryrun.build_cell(
+        arch, shape, mesh, moe_mode=moe_mode, cfg_overrides=cfg_overrides,
+        plan_overrides=plan_overrides, ssm_sp=ssm_sp)
+    compiled = jitted.lower(*args).compile()
+    txt = compiled.as_text()
+    mod = hlo_cost.parse_module(txt)
+    memo = {}
+    total = hlo_cost._comp_cost(mod["entry"], mod, mesh.size, memo)
+    from repro.core.rooflinemodel import terms_from_counts
+
+    terms = terms_from_counts(total.flops, total.bytes,
+                              total.collective_wire_bytes)
+    print(f"== {arch} × {shape} ({mesh_kind}; moe={moe_mode}, "
+          f"ssm_sp={ssm_sp}, cfg={cfg_overrides}, plan={plan_overrides})")
+    print(f"   compute_s={terms.compute_s:.3f}  memory_s={terms.memory_s:.3f}"
+          f"  collective_s={terms.collective_s:.3f}  "
+          f"bottleneck={terms.bottleneck}  frac={terms.compute_fraction:.4f}")
+    print("   bytes by opcode:")
+    for k, v in sorted(total.bytes_by_opcode.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"     {k:24s} {v/1e9:10.1f} GB  {100*v/max(total.bytes,1):5.1f}%")
+    print("   collectives:", {k: int(v) for k, v in
+                              total.collective_counts.items()})
+    print("   top computations (per-call cost):")
+    rows = sorted(((c.bytes, c.flops, n) for n, c in memo.items()),
+                  reverse=True)[:top]
+    for b, f, n in rows:
+        print(f"     {b/1e9:10.2f} GB {f/1e12:8.2f} TF  {n[:70]}")
+    if drill:
+        comp = next((c for n, c in mod["computations"].items()
+                     if drill in n), None)
+        name = next((n for n in mod["computations"] if drill in n), None)
+        if comp is None:
+            print(f"   drill: no computation matching {drill!r}")
+        else:
+            print(f"   drill into {name}:")
+            comps = mod["computations"]
+            producers, sources = hlo_cost._build_sources(comp)
+            per = defaultdict(float)
+            for op in comp.ops:
+                if op.opcode != "fusion":
+                    continue
+                m = hlo_cost._CALLS_RE.search(op.rest)
+                called = comps.get(m.group(1)) if m else None
+                io_reads, _ = (hlo_cost._fusion_io(called) if called
+                               else ({}, None))
+                srcs = set()
+                for i, o in enumerate(op.operand_names):
+                    if io_reads.get(i) is not None:
+                        per["SLICED"] += io_reads[i]
+                        continue
+                    srcs |= set(sources(o))
+                for src in srcs:
+                    sh = comp.symbols.get(src, "?").split("{")[0]
+                    per[sh] += hlo_cost._parse_shape_bytes(
+                        comp.symbols.get(src, ""))
+            for sh, b in sorted(per.items(), key=lambda kv: -kv[1])[:12]:
+                print(f"     {b/1e9:9.2f} GB/call  {sh}")
+    return terms, total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--moe-mode", default="tp")
+    ap.add_argument("--set", nargs="*", default=None,
+                    help="cfg overrides k=v")
+    ap.add_argument("--plan", nargs="*", default=None,
+                    help="train-plan overrides k=v")
+    ap.add_argument("--ssm-sp", action="store_true")
+    ap.add_argument("--drill", default=None)
+    args = ap.parse_args()
+    explain(args.arch, args.shape, args.mesh, moe_mode=args.moe_mode,
+            cfg_overrides=parse_kv(args.set) or None,
+            plan_overrides=parse_kv(args.plan) or None,
+            ssm_sp=args.ssm_sp, drill=args.drill)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Post-SPMD HLO analysis: collective inventory + roofline terms.
+
+``compiled.cost_analysis()`` gives per-device FLOPs and HBM bytes but NOT
+collective traffic — that is parsed from the optimized HLO text
+(``compiled.as_text()``), where shapes are already per-device.  Each
+collective's wire bytes use the standard ring-algorithm factors on its
+replica-group size N:
+
+    all-reduce       2 (N-1)/N × operand          (RS + AG phases)
+    all-gather       (N-1)   × operand            (operand is the shard)
+    reduce-scatter   (N-1)/N × operand
+    all-to-all       (N-1)/N × operand
+    collective-permute  1     × operand           (neighbor traffic)
+
+The collective roofline term divides by ONE ICI link (50 GB/s): a
+deliberately conservative single-link serialization model (document:
+multi-axis tori overlap axes across their 4 links, so real hardware can
+beat this term by up to the link count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# "  %x = bf16[16,128]{1,0} all-gather(bf16[1,128]{1,0} %p), ..."
+_OP_RE = re.compile(
+    r"=\s+(?:\([^)]*\)\s+)?[\w\[\]{},]*\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [num_groups,group_size]<=[...]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: dict
+    operand_bytes: dict          # raw per-device operand bytes by op kind
+    wire_bytes: float            # ring-factor adjusted, per device
+
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    count: dict = defaultdict(int)
+    operand_bytes: dict = defaultdict(float)
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:120]:
+            continue  # count -start, skip -done halves of async pairs
+        op = m.group(1)
+        # operand shapes: everything inside the call parens
+        paren = line[m.end():]
+        shapes = _SHAPE_RE.findall(paren)
+        ob = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if ob == 0:
+            continue
+        n = max(_group_size(line, n_devices), 1)
+        factor = {
+            "all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": float(n - 1),
+            "reduce-scatter": (n - 1) / n,
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+        }[op]
+        count[op] += 1
+        operand_bytes[op] += ob
+        wire += ob * factor
+    return CollectiveStats(dict(count), dict(operand_bytes), wire)
+
+
+def cost_summary(compiled, n_devices: int) -> dict:
+    """Trip-count-aware FLOPs/bytes/collectives (repro.launch.hlo_cost)
+    plus raw XLA cost_analysis (body-once; kept for cross-checking) and
+    memory analysis."""
+    from repro.launch import hlo_cost
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    hlo = hlo_cost.analyze(compiled.as_text(), n_devices)
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover - backend dependent
+        mem_info = {"error": str(e)}
+    return {
+        "flops_per_device": hlo.flops,
+        "hbm_bytes_per_device": hlo.bytes,
+        "collective_wire_bytes_per_device": hlo.collective_wire_bytes,
+        "collective_counts": {k: int(v)
+                              for k, v in hlo.collective_counts.items()},
+        "collective_operand_bytes": dict(hlo.collective_bytes),
+        "xla_flops_body_once": float(ca.get("flops", 0.0)),
+        "xla_bytes_body_once": float(ca.get("bytes accessed", 0.0)),
+        "memory": mem_info,
+    }

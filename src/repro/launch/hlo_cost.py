@@ -1,0 +1,636 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — useless for
+scan-over-layers programs (a 94-layer stack reports ~1 layer of FLOPs).
+This module parses ``compiled.as_text()`` into computations, resolves each
+op's operand shapes through a per-computation symbol table, walks the call
+graph from ENTRY, and multiplies while bodies by their trip counts (read
+from the loop condition's comparison constant — exact for every
+``lax.scan``/``lax.map``-derived loop in this codebase, which contains no
+dynamic-bound loops).
+
+Cost conventions (per device — shapes in post-SPMD HLO are per-shard):
+  flops: dot = 2·prod(result)·K (K = contracted extent); convolution =
+         2·prod(result)·prod(kernel_spatial)·Cin  (unused here);
+         elementwise/fusion internals are ignored (vector-unit work is
+         bandwidth-dominated and priced by the bytes term).
+  bytes: Σ over *top-level* ops of operand+result sizes, skipping
+         zero-traffic ops (bitcast/tuple/get-tuple-element/parameter/
+         constant) and control ops (while/conditional/call priced by their
+         bodies instead).  Fusion internals are free (VMEM-resident).
+  collectives: per-op wire bytes via ring factors on the replica-group
+         size N (operand sizes inferred from result: AG operand=result/N,
+         RS operand=result·N, AR/A2A/CP operand=result).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\](?:\{[^}]*\})?")
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.:-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.:-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.:-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.:-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.:-]+).*body=%?([\w.:-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONSTANT_RE = re.compile(r"constant\((\d+)\)")
+# Kernel-region marker: ops inside a jax.named_scope("__kernel__<name>")
+# ship as ONE fused Pallas kernel on the TPU target — the bytes model
+# charges only region-external reads/writes (VMEM-resident interior).
+_KERNEL_RE = re.compile(r'op_name="[^"]*__kernel__(\w+)')
+
+_SKIP_BYTES = {"bitcast", "tuple", "get-tuple-element", "parameter",
+               "constant", "after-all", "add-dependency", "iota",
+               "partition-id", "replica-id"}
+
+# Top-level elementwise/shape ops that a TPU compile fuses into neighboring
+# kernels (CPU XLA leaves them unfused, which would inflate the HBM-traffic
+# estimate ~5-10x).  Treated as zero-traffic: their inputs/outputs are
+# charged at the enclosing materialization points (dots, fusions,
+# collectives, copies, slices-into-loops, reduces).
+_FUSED_THROUGH = {
+    "convert", "multiply", "add", "subtract", "divide", "maximum", "minimum",
+    "compare", "select", "and", "or", "not", "xor", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "sqrt", "rsqrt",
+    "power", "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "is-finite", "clamp", "broadcast", "reshape",
+    "logistic", "cosine", "sine", "atan2", "rem", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "reverse", "map",
+    "reduce-precision", "real", "imag", "complex", "expm1", "log1p",
+    "stochastic-convert", "slice", "pad", "concatenate",
+}
+_CONTROL = {"while", "conditional", "call", "fusion", "async-start",
+            "async-done"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start", "reduce-scatter-start",
+                "all-to-all-start", "ragged-all-to-all"}
+
+
+def _parse_shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dt, dims = m.group(1), m.group(2)
+    shape = tuple(int(d) for d in dims.split(",") if d.strip())
+    return dt, shape
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # text after the opening paren (args + attributes)
+
+    @property
+    def operand_names(self):
+        depth, args, cur = 1, [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                if ch == "," and depth == 1:
+                    args.append("".join(cur))
+                    cur = []
+                else:
+                    cur.append(ch)
+        args.append("".join(cur))
+        out = []
+        for a in args:
+            a = a.strip()
+            if "*/" in a:                 # strip /*index=N*/ comments
+                a = a.split("*/", 1)[1].strip()
+            if a.startswith("%"):
+                out.append(a[1:])
+        return out
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict      # op name -> type string
+
+    def trip_count(self) -> int | None:
+        """If this is a loop CONDITION computation: the bound constant."""
+        consts = [int(c)
+                  for o in self.ops
+                  for c in _CONSTANT_RE.findall(f"{o.opcode}({o.rest}")]
+        consts = [c for c in consts if c > 0]
+        return max(consts) if consts else None
+
+
+def _parse_op_line(line: str) -> Op | None:
+    """Parse '%name = TYPE opcode(args), attrs' with balanced-paren type
+    scanning (tuple types may contain /*index=N*/ comments)."""
+    mh = _OP_HEAD_RE.match(line)
+    if not mh:
+        return None
+    name = mh.group(1)
+    i = mh.end()
+    if i < len(line) and line[i] == "(":       # tuple type
+        depth = 0
+        j = i
+        while j < len(line):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i:j + 1]
+        i = j + 1
+    else:                                      # array type dtype[dims]{layout}
+        ms = _SHAPE_RE.match(line, i)
+        if not ms:
+            return None
+        j = ms.end()
+        type_str = line[i:j]
+        i = j
+    mo = _OPCODE_RE.match(line, i)
+    if not mo:
+        return None
+    return Op(name, type_str, mo.group(1), line[mo.end():])
+
+
+def parse_module(hlo_text: str) -> dict:
+    comps: dict = {}
+    cur = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and line.endswith("{"):
+            cur = Computation(mc.group(1), [], {})
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        op = _parse_op_line(line)
+        if op is not None:
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    return {"computations": comps, "entry": entry}
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, result = _parse_dims(op.type_str)
+    operands = op.operand_names
+    if not operands:
+        return 0.0
+    lhs_t = comp.symbols.get(operands[0], "")
+    _, lhs = _parse_dims(lhs_t)
+    mc = _CONTRACT_RE.search(op.rest)
+    k = 1
+    if mc and lhs:
+        for idx in mc.group(1).split(","):
+            if idx.strip() and int(idx) < len(lhs):
+                k *= lhs[int(idx)]
+    n = 1
+    for d in result:
+        n *= d
+    return 2.0 * n * k
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _collective_wire_bytes(op: Op, n_default: int):
+    """(kind, operand_bytes, wire_bytes) from the RESULT shape."""
+    kind = op.opcode.replace("-start", "")
+    result_b = _parse_shape_bytes(op.type_str)
+    n = max(_group_size(op.rest, n_default), 1)
+    if kind == "all-gather":
+        operand = result_b / n
+        wire = operand * (n - 1)
+    elif kind == "reduce-scatter":
+        operand = result_b * n
+        wire = operand * (n - 1) / n
+    elif kind == "all-reduce":
+        operand = result_b
+        wire = operand * 2.0 * (n - 1) / n
+    elif kind in ("all-to-all", "ragged-all-to-all"):
+        operand = result_b
+        wire = operand * (n - 1) / n
+    else:  # collective-permute
+        operand = result_b
+        wire = float(operand)
+    return kind, float(operand), float(wire)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    bytes_by_opcode: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.bytes_by_opcode.items():
+            self.bytes_by_opcode[k] += v * mult
+
+
+def _build_sources(comp: Computation):
+    """Resolve reads through pass-through (fused) ops to materializing
+    producers.  sources(name) -> list of producer op names whose RESULTS
+    are actually read from HBM when `name` is consumed."""
+    producers = {op.name: op for op in comp.ops}
+    memo: dict = {}
+
+    def sources(name: str, depth: int = 0):
+        if name in memo:
+            return memo[name]
+        op = producers.get(name)
+        if op is None or depth > 200:
+            return [name]
+        if op.opcode in _FUSED_THROUGH:
+            out, seen = [], set()
+            for o in op.operand_names:
+                for s in sources(o, depth + 1):
+                    if s not in seen:
+                        seen.add(s)
+                        out.append(s)
+            memo[name] = out
+            return out
+        if op.opcode in ("bitcast",):
+            ops_ = op.operand_names
+            out = sources(ops_[0], depth + 1) if ops_ else [name]
+            memo[name] = out
+            return out
+        if op.opcode in ("constant", "iota", "partition-id", "replica-id",
+                         "after-all"):
+            memo[name] = []
+            return []
+        memo[name] = [name]
+        return [name]
+
+    return producers, sources
+
+
+def _fusion_components(comp: Computation, producers, sources):
+    """Union adjacent fusions (connected through pass-through chains) into
+    components — the TPU compile would emit them as one kernel."""
+    fusion_names = [op.name for op in comp.ops if op.opcode == "fusion"]
+    parent = {n: n for n in fusion_names}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a, b):
+        parent[find(a)] = find(b)
+
+    fuset = set(fusion_names)
+    for op in comp.ops:
+        if op.opcode != "fusion":
+            continue
+        for o in op.operand_names:
+            for src in sources(o):
+                if src in fuset:
+                    union(op.name, src)
+    groups: dict = defaultdict(list)
+    for n in fusion_names:
+        groups[find(n)].append(n)
+    return groups
+
+
+_PARAM_IDX_RE = re.compile(r"\s*(\d+)")
+
+
+def _fusion_io(called: Computation):
+    """Slice-aware I/O of a fusion computation.
+
+    Returns (read_bytes: {param_idx: bytes|None}, write_bytes: bytes|None).
+    A parameter consumed ONLY through (dynamic-)slice reads just the slice
+    (the scan-residual indexing pattern); a root dynamic-update-slice
+    writes just the update (the in-place stacking pattern).  None = full.
+    """
+    params = {}
+    consumers = defaultdict(list)
+    for op in called.ops:
+        if op.opcode == "parameter":
+            m = _PARAM_IDX_RE.match(op.rest)
+            if m:
+                params[int(m.group(1))] = op.name
+        for o in op.operand_names:
+            consumers[o].append(op)
+    read_bytes: dict = {}
+    for idx, pname in params.items():
+        # BFS through pass-through ops: every use path must hit a
+        # (dynamic-)slice before any materializing op for slice pricing
+        slice_bytes = 0.0
+        full = False
+        stack = [pname]
+        seen: set = set()
+        while stack:
+            n = stack.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            for c in consumers.get(n, []):
+                if c.opcode in ("dynamic-slice", "slice"):
+                    slice_bytes += _parse_shape_bytes(c.type_str)
+                elif c.opcode in _FUSED_THROUGH or c.opcode == "bitcast":
+                    stack.append(c.name)
+                else:
+                    full = True
+        if not full and seen:
+            read_bytes[idx] = float(slice_bytes)
+        else:
+            read_bytes[idx] = None
+    write_bytes = None
+    root = called.ops[-1] if called.ops else None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        ops_ = root.operand_names
+        if len(ops_) >= 2:
+            write_bytes = float(_parse_shape_bytes(
+                called.symbols.get(ops_[1], "")))
+            # the in-place-updated buffer (operand 0) is aliased, not read:
+            # zero its read charge if its ONLY consumer is this dus root
+            buf = ops_[0]
+            producers_local = {op.name: op for op in called.ops}
+            while buf in producers_local and \
+                    producers_local[buf].opcode == "bitcast":
+                buf = (producers_local[buf].operand_names or [""])[0]
+            for idx, pname in params.items():
+                if pname == buf and all(
+                        c.name == root.name for c in consumers.get(buf, [])):
+                    read_bytes[idx] = 0.0
+    return read_bytes, write_bytes
+
+
+def _comp_cost(comp_name: str, module: dict, n_devices: int,
+               memo: dict, *, include_bytes: bool = True) -> HloCost:
+    if comp_name in memo:
+        return memo[comp_name]
+    comps = module["computations"]
+    comp = comps.get(comp_name)
+    cost = HloCost()
+    if comp is None:
+        memo[comp_name] = cost
+        return cost
+    memo[comp_name] = cost  # pre-insert (defensive vs cycles)
+    producers, sources = _build_sources(comp)
+
+    def charge_reads(op: Op, key: str):
+        srcs = {src for o in op.operand_names for src in sources(o)}
+        for src in srcs:  # dedupe: one HBM read per distinct tensor
+            b = _parse_shape_bytes(comp.symbols.get(src, ""))
+            cost.bytes += b
+            cost.bytes_by_opcode[key + ":read"] += b
+
+    def charge_write(op: Op, key: str):
+        b = _parse_shape_bytes(op.type_str)
+        cost.bytes += b
+        cost.bytes_by_opcode[key + ":write"] += b
+
+    fusion_groups = (_fusion_components(comp, producers, sources)
+                     if include_bytes else {})
+    member_of = {}
+    for root, members in fusion_groups.items():
+        for m in members:
+            member_of[m] = root
+    # kernel regions (named_scope markers) — grouped per marker name
+    kernel_of: dict = {}
+    if include_bytes:
+        for op in comp.ops:
+            mk = _KERNEL_RE.search(op.rest)
+            if mk:
+                kernel_of[op.name] = mk.group(1)
+    kernel_groups: dict = defaultdict(list)
+    for n, marker in kernel_of.items():
+        kernel_groups[marker].append(n)
+    # a fusion's result is written iff some non-member reads it
+    external_reads: set = set()
+    root_op = comp.ops[-1] if comp.ops else None
+    for op in comp.ops:
+        if op.opcode in _FUSED_THROUGH or op.opcode in ("bitcast",):
+            continue
+        for o in op.operand_names:
+            for src in sources(o):
+                if src in member_of and member_of.get(op.name) != member_of[src]:
+                    external_reads.add(src)
+                elif src in member_of and op.name not in member_of:
+                    external_reads.add(src)
+    if root_op is not None and root_op.name in member_of:
+        external_reads.add(root_op.name)
+
+    for op in comp.ops:
+        oc = op.opcode
+        in_kernel = op.name in kernel_of
+        if oc == "while":
+            m = _COND_BODY_RE.search(op.rest)
+            if m:
+                cond_name, body_name = m.group(1), m.group(2)
+                trip = 1
+                if cond_name in comps:
+                    trip = comps[cond_name].trip_count() or 1
+                body_cost = _comp_cost(body_name, module, n_devices, memo)
+                cost.add(body_cost, mult=trip)
+            continue
+        if oc == "conditional":
+            m = _BRANCHES_RE.search(op.rest)
+            if m:
+                branch_costs = [
+                    _comp_cost(b.strip().lstrip("%"), module, n_devices, memo)
+                    for b in m.group(1).split(",")]
+                # conservative: max-cost branch (no conds in our hot paths)
+                best = max(branch_costs, key=lambda c: c.flops + c.bytes,
+                           default=HloCost())
+                cost.add(best)
+            continue
+        if oc == "call":
+            m = _TO_APPLY_RE.search(op.rest)
+            if m:
+                cost.add(_comp_cost(m.group(1), module, n_devices, memo))
+            continue
+        if oc == "fusion":
+            m = _CALLS_RE.search(op.rest)
+            called = comps.get(m.group(1)) if m else None
+            if called is not None:  # flops; internal traffic is VMEM
+                inner = _comp_cost(called.name, module, n_devices, memo,
+                                   include_bytes=False)
+                cost.flops += inner.flops
+            if include_bytes and not in_kernel:
+                io_reads, io_write = (_fusion_io(called)
+                                      if called is not None else ({}, None))
+                my_comp = member_of.get(op.name)
+                full_srcs: set = set()
+                for i, o in enumerate(op.operand_names):
+                    rb = io_reads.get(i)
+                    if rb is not None:     # slice-only access: charge slice
+                        cost.bytes += rb
+                        cost.bytes_by_opcode["fusion:read"] += rb
+                        continue
+                    for src in sources(o):
+                        if member_of.get(src) == my_comp and src != op.name:
+                            continue  # intra-component edge: VMEM
+                        full_srcs.add(src)
+                for src in full_srcs:      # dedupe per kernel
+                    b = _parse_shape_bytes(comp.symbols.get(src, ""))
+                    cost.bytes += b
+                    cost.bytes_by_opcode["fusion:read"] += b
+                if io_write is not None:   # in-place update: charge update
+                    cost.bytes += io_write
+                    cost.bytes_by_opcode["fusion:write"] += io_write
+                elif op.name in external_reads:
+                    charge_write(op, "fusion")
+            continue
+        if oc in _COLLECTIVES:
+            kind, operand_b, wire_b = _collective_wire_bytes(op, n_devices)
+            cost.collective_counts[kind] += 1
+            cost.collective_bytes[kind] += operand_b
+            cost.collective_wire_bytes += wire_b
+            if include_bytes and not in_kernel:
+                cost.bytes += operand_b + _parse_shape_bytes(op.type_str)
+                cost.bytes_by_opcode["collective"] += (
+                    operand_b + _parse_shape_bytes(op.type_str))
+            continue
+        if oc.endswith("-done") or oc in _SKIP_BYTES or oc in _FUSED_THROUGH \
+                or oc == "bitcast":
+            continue
+        if oc in ("dot", "dot-general"):
+            cost.flops += _dot_flops(op, comp)
+        if include_bytes and not in_kernel:
+            if oc in ("dynamic-slice", "gather"):
+                # reads only the addressed slice/rows ≈ result size
+                b = 2 * _parse_shape_bytes(op.type_str)
+                cost.bytes += b
+                cost.bytes_by_opcode["slice:rw"] += b
+            elif oc in ("dynamic-update-slice", "scatter"):
+                upd = (op.operand_names[1:2] or [""])[0]
+                b = 2 * _parse_shape_bytes(comp.symbols.get(upd, ""))
+                cost.bytes += b
+                cost.bytes_by_opcode["update:rw"] += b
+            else:
+                charge_reads(op, oc if oc in ("dot", "copy") else "other")
+                charge_write(op, oc if oc in ("dot", "copy") else "other")
+
+    # --- kernel regions: charge external I/O once per region ----------------
+    if include_bytes and kernel_groups:
+        consumers: dict = defaultdict(list)
+        for op in comp.ops:
+            for o in op.operand_names:
+                consumers[o].append(op)
+        root_name = comp.ops[-1].name if comp.ops else None
+        for marker, members in kernel_groups.items():
+            mset = set(members)
+            read_srcs: set = set()
+            sliced_reads = 0.0
+            for opn in members:
+                op = producers.get(opn)
+                if op is None or op.opcode in _FUSED_THROUGH \
+                        or op.opcode in ("bitcast",) or op.opcode in _SKIP_BYTES:
+                    continue
+                if op.opcode in ("dynamic-slice", "slice", "gather"):
+                    ext = any(src not in mset
+                              for o in op.operand_names
+                              for src in sources(o))
+                    if ext:  # reads only the slice
+                        sliced_reads += _parse_shape_bytes(op.type_str)
+                    continue
+                for o in op.operand_names:
+                    for src in sources(o):
+                        if src not in mset:
+                            read_srcs.add(src)
+            writes = 0.0
+            for opn in members:
+                op = producers.get(opn)
+                if op is None or op.opcode in _FUSED_THROUGH \
+                        or op.opcode in ("bitcast",):
+                    continue
+                external = opn == root_name
+                stack = list(consumers.get(opn, []))
+                seen = set()
+                while stack and not external:
+                    c = stack.pop()
+                    if c.name in seen:
+                        continue
+                    seen.add(c.name)
+                    if c.name in mset:
+                        continue
+                    if c.opcode in _FUSED_THROUGH or c.opcode in ("bitcast",):
+                        if c.name == root_name:
+                            external = True
+                        stack.extend(consumers.get(c.name, []))
+                    else:
+                        external = True
+                if external:
+                    writes += _parse_shape_bytes(op.type_str)
+            rb = sliced_reads + sum(
+                _parse_shape_bytes(comp.symbols.get(s, "")) for s in read_srcs)
+            cost.bytes += rb + writes
+            cost.bytes_by_opcode[f"kernel:{marker}"] += rb + writes
+    memo[comp_name] = cost
+    return cost
+
+
+def analyze(hlo_text: str, n_devices: int) -> HloCost:
+    """Per-device trip-count-aware cost of the whole module."""
+    module = parse_module(hlo_text)
+    if module["entry"] is None:
+        return HloCost()
+    # fusions' called computations must not be double counted when reached
+    # from the entry walk — _comp_cost handles them only via their callers.
+    return _comp_cost(module["entry"], module, n_devices, {})

@@ -1,0 +1,37 @@
+"""Production meshes.  A FUNCTION (not module-level constant) so importing
+never touches jax device state — the dry-run sets XLA_FLAGS before any jax
+initialization and calls this afterwards.
+
+Single-pod: (16, 16)   ("data", "model")          — 256 chips (v5e pod)
+Multi-pod:  (2, 16, 16) ("pod", "data", "model")  — 512 chips, 2 pods
+
+The ``pod`` axis composes with ``data`` for batch/FSDP sharding (DCN-ish
+outer axis); ``model`` stays inside a pod (ICI-only TP) — the layout that
+scales to 1000+ nodes by growing the pod count only.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/benchmarks (first prod(shape) devices)."""
+    n = math.prod(shape)
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

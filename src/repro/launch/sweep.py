@@ -1,0 +1,65 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Full dry-run sweep: every (arch × applicable shape × mesh) cell, with
+per-cell JSON artifacts and a resumable manifest (skips cells whose
+artifact already exists unless --force).
+
+    PYTHONPATH=src python -m repro.launch.sweep --mesh both
+"""
+import argparse
+import json
+import time
+
+from repro.configs.registry import ARCHS
+from repro.configs.shapes import SHAPES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--archs", default=None, help="comma-separated subset")
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--moe-mode", default="tp")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+
+    out = args.out or os.path.abspath(dryrun.ARTIFACT_DIR)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = args.archs.split(",") if args.archs else list(ARCHS)
+    shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
+
+    t0 = time.time()
+    results = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                path = os.path.join(out, mesh_kind,
+                                    f"{arch}__{shape}.json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        art = json.load(f)
+                    if art.get("status") in ("ok", "skipped"):
+                        print(f"[sweep] cached {mesh_kind} {arch} {shape}: "
+                              f"{art['status']}", flush=True)
+                        results.append(art)
+                        continue
+                art = dryrun.run_cell(arch, shape, mesh_kind,
+                                      moe_mode=args.moe_mode)
+                dryrun.save_artifact(art, out)
+                results.append(art)
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"[sweep] {len(results)} cells in {time.time() - t0:.0f}s; "
+          f"{len(bad)} errors", flush=True)
+    for r in bad:
+        print(f"  ERROR {r['mesh']} {r['arch']} {r['shape']}: "
+              f"{r.get('error', '')[:200]}", flush=True)
+    raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Transformer building blocks: GQA attention (train/prefill/decode) and the
+pre-norm residual block composition."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.attention import MaskSpec, chunked_mha, decode_mha, full_mha
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, Smax, KH, D)
+    v: jnp.ndarray
+    # length is tracked by the serving engine (one scalar for the batch)
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype, qkv_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    import numpy as np
+
+    std = 1.0 / np.sqrt(d_model)
+    p = {
+        "wq": layers.truncated_normal(kq, (d_model, num_heads, head_dim), std, dtype),
+        "wk": layers.truncated_normal(kk, (d_model, num_kv_heads, head_dim), std, dtype),
+        "wv": layers.truncated_normal(kv, (d_model, num_kv_heads, head_dim), std, dtype),
+        "wo": layers.truncated_normal(
+            ko, (num_heads, head_dim, d_model), 1.0 / np.sqrt(num_heads * head_dim), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads, head_dim), dtype)
+    return p
+
+
+def attention(
+    params: dict,
+    x: jnp.ndarray,                  # (B, S, D)
+    *,
+    rope_theta: float,
+    positions: jnp.ndarray,          # (S,) absolute positions
+    mask: MaskSpec,
+    cache: KVCache | None = None,
+    cache_len=None,                  # filled prefix length (decode/prefill)
+    impl: str = "chunked",
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    """Returns (y, new_cache).  Modes:
+      train:    cache=None                    -> causal self-attention
+      prefill:  cache empty, cache_len=None   -> fill cache[0:S]
+      decode:   cache filled, cache_len=t     -> append at t, attend to [0:t]
+    """
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = layers.apply_rope(q, positions, rope_theta)
+    k = layers.apply_rope(k, positions, rope_theta)
+
+    new_cache = cache
+    if cache is not None:
+        if cache_len is None:  # prefill: write [0:S]
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), 0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), 0, axis=1)
+            new_cache = KVCache(kc, vc)
+            attn_k, attn_v = k, v
+            valid = None
+        else:  # decode: append one token at cache_len (scalar or (B,))
+            if getattr(cache_len, "ndim", 0) >= 1:  # per-slot positions
+                upd = lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, i, axis=0)
+                kc = jax.vmap(upd)(cache.k, k.astype(cache.k.dtype),
+                                   cache_len)
+                vc = jax.vmap(upd)(cache.v, v.astype(cache.v.dtype),
+                                   cache_len)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    cache.k, k.astype(cache.k.dtype), cache_len, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    cache.v, v.astype(cache.v.dtype), cache_len, axis=1)
+            new_cache = KVCache(kc, vc)
+            out = decode_mha(q, kc.astype(dt), vc.astype(dt),
+                             cache_len + q.shape[1])
+            y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+            return y, new_cache
+    else:
+        attn_k, attn_v = k, v
+        valid = None
+
+    if impl == "full":
+        out = full_mha(q, attn_k, attn_v, mask, kv_valid_len=valid)
+    else:
+        out = chunked_mha(q, attn_k, attn_v, mask, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, kv_valid_len=valid)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache

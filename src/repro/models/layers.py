@@ -1,0 +1,107 @@
+"""Shared neural-net layers, pure JAX (no flax): param-dict modules.
+
+Every layer is a pair of functions: ``init_*`` building a param pytree from
+a PRNG key (usable under ``jax.eval_shape`` for the allocation-free dry-run)
+and an apply function.  Weights are stored in ``param_dtype`` (fp32 masters
+by default; bf16 for the very largest configs) and cast to ``compute_dtype``
+at use — the standard mixed-precision scheme.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, stddev, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (rotate-half convention)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                           # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embeddings
+# ---------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               stddev: float | None = None) -> dict:
+    stddev = stddev if stddev is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": truncated_normal(key, (d_in, d_out), stddev, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: dict, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    dt = compute_dtype or x.dtype
+    y = x.astype(dt) @ params["w"].astype(dt)
+    if "b" in params:
+        y = y + params["b"].astype(dt)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    # 1/sqrt(d): keeps tied-unembedding logits O(1) at init; the pre-stack
+    # rmsnorm-free residual entry is fine because blocks pre-norm.
+    return {"table": truncated_normal(key, (vocab, d), 1.0 / np.sqrt(d), dtype)}
+
+
+def embed(params: dict, ids: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jnp.take(params["table"], ids, axis=0).astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d, d_ff, dtype),
+        "up": init_dense(k2, d, d_ff, dtype),
+        "down": init_dense(k3, d_ff, d, dtype, stddev=1.0 / np.sqrt(d_ff)),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = dense(params["gate"], x)
+    u = dense(params["up"], x)
+    return dense(params["down"], jax.nn.silu(g) * u)
+
+
+def swiglu_ffn_flops(d: int, d_ff: int) -> int:
+    return 2 * d * d_ff * 3  # per token, fwd

@@ -1,0 +1,178 @@
+"""Unified model API over all assigned architectures.
+
+    params = init_params(cfg, key)
+    loss, metrics       = loss_fn(params, cfg, batch, shard)        # train
+    logits, caches      = prefill(params, cfg, batch, caches, shard)
+    logits, caches      = decode_step(params, cfg, token, caches, t, shard)
+
+``batch`` is a dict:
+    tokens        (B, S)  int32    — all archs except pure-embeds input
+    targets       (B, S)  int32    — train only (next-token labels)
+    embeds        (B, S, d) bf16   — musicgen stub frame embeddings (optional
+                                     replacement for tokens)
+    prefix_embeds (B, P, d) bf16   — paligemma stub patch embeddings
+
+The loss is computed **chunked over the sequence** (``loss_chunk``
+positions at a time, rematerialized): the (B, S, V) logits tensor for the
+151k–256k vocabularies never exists in full — only (B, chunk, V) transients
+(sharded over ``tp`` on V).  This is what lets the 256k-vocab archs fit the
+dry-run memory budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers, transformer
+from repro.models.attention import MaskSpec
+from repro.models.config import LOCAL, ModelConfig, ShardCfg
+
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "embed": layers.init_embedding(k1, cfg.vocab_size, cfg.d_model,
+                                       cfg.param_dtype),
+        "stack": transformer.init_layer_stack(k2, cfg),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.init_dense(
+            k3, cfg.d_model, cfg.vocab_size, cfg.param_dtype)
+    return p
+
+
+def _unembed_w(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T       # (d, V)
+    return params["unembed"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# input embedding (modality-aware)
+# ---------------------------------------------------------------------------
+def embed_inputs(params, cfg: ModelConfig, batch: dict, shard: ShardCfg):
+    """Returns (x (B, S_total, d), prefix_len)."""
+    if "embeds" in batch:                       # musicgen stub frontend
+        x = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], cfg.compute_dtype)
+    prefix_len = 0
+    if "prefix_embeds" in batch:                # paligemma stub frontend
+        pre = batch["prefix_embeds"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+        prefix_len = pre.shape[1]
+    return shard.constrain_act(x, None, None), prefix_len
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy head
+# ---------------------------------------------------------------------------
+def _xent_chunk(w, hx, tgt, shard: ShardCfg):
+    """hx (B,c,d), tgt (B,c) -> (sum_loss, sum_correct)."""
+    logits = hx @ w                                       # (B,c,V)
+    logits = shard.constrain(logits, shard.act_spec(None, shard.tp))
+    logits = logits.astype(jnp.float32)
+    m = logits.max(axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(tgt, logits.shape[-1], dtype=jnp.float32)
+    tgt_logit = jnp.einsum("bcv,bcv->bc", logits, onehot)
+    valid = (tgt >= 0).astype(jnp.float32)
+    loss = jnp.sum((lse - tgt_logit) * valid)
+    correct = jnp.sum((jnp.argmax(logits, -1) == tgt) * valid)
+    return loss, correct, jnp.sum(valid)
+
+
+def chunked_xent(params, cfg: ModelConfig, hidden, targets,
+                 shard: ShardCfg, chunk: int = LOSS_CHUNK):
+    """Mean next-token CE over (B,S,d) hidden vs (B,S) targets.
+
+    targets < 0 are masked out.  Chunked + rematerialized over S so the
+    full-vocab logits tensor never materializes.
+    """
+    b, s, d = hidden.shape
+    w = _unembed_w(params, cfg).astype(cfg.compute_dtype)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hc = hidden.reshape(b, nc, chunk, d)
+    tc = targets.reshape(b, nc, chunk)
+
+    body = jax.checkpoint(
+        lambda carry, xs: (jax.tree.map(
+            jnp.add, carry, _xent_chunk(w, xs[0], xs[1], shard)), None))
+    z = jnp.zeros((), jnp.float32)
+    (loss, correct, count), _ = lax.scan(
+        body, (z, z, z), (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(tc, 1, 0)))
+    count = jnp.maximum(count, 1.0)
+    return loss / count, correct / count
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode
+# ---------------------------------------------------------------------------
+def loss_fn(params, cfg: ModelConfig, batch: dict, shard: ShardCfg = LOCAL):
+    x, prefix_len = embed_inputs(params, cfg, batch, shard)
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total)
+    mask = MaskSpec(causal=True, prefix_len=prefix_len)
+    x, _, met = transformer.stack_seq(params["stack"], cfg, x, shard,
+                                      positions=positions, mask=mask,
+                                      mode="train")
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if prefix_len:
+        x = x[:, prefix_len:]                  # loss over the text segment
+    loss, acc = chunked_xent(params, cfg, x, batch["targets"], shard)
+    total = loss + met.moe_aux + met.moe_z
+    return total, {"ce": loss, "acc": acc, "moe_aux": met.moe_aux,
+                   "moe_z": met.moe_z, "moe_dropped": met.moe_dropped}
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, caches, shard: ShardCfg):
+    """Fill caches from a prompt; returns (last-position logits, caches)."""
+    x, prefix_len = embed_inputs(params, cfg, batch, shard)
+    positions = jnp.arange(x.shape[1])
+    mask = MaskSpec(causal=True, prefix_len=prefix_len)
+    x, caches, _ = transformer.stack_seq(params["stack"], cfg, x, shard,
+                                         positions=positions, mask=mask,
+                                         caches=caches, mode="prefill")
+    x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = x @ _unembed_w(params, cfg).astype(x.dtype)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, cache_len,
+                shard: ShardCfg = LOCAL):
+    """One decode step.  token (B, 1) int32; cache_len: filled length."""
+    x = layers.embed(params["embed"], token, cfg.compute_dtype)
+    x = shard.constrain_act(x, None, None)
+    x, caches = transformer.stack_step(params["stack"], cfg, x, shard,
+                                       caches=caches, cache_len=cache_len)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ _unembed_w(params, cfg).astype(x.dtype)
+    logits = shard.constrain(logits, shard.act_spec(None, shard.tp))
+    return logits, caches
+
+
+init_caches = transformer.init_caches
+
+
+def model_flops_per_step(cfg: ModelConfig, batch: int, seq: int,
+                         training: bool = True) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (fwd)."""
+    n = cfg.active_param_count()
+    mult = 6 if training else 2
+    return float(mult) * n * batch * seq

@@ -1,0 +1,278 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bucketed sort dispatch.
+
+The paper's driver idea (decompose, exchange only what neighbors need,
+overlap) maps onto MoE as expert-parallel dispatch.  Three modes (ShardCfg):
+
+* ``local`` — every device holds and computes all experts (single-device
+  tests and the pjit fallback; no collectives).
+* ``tp``    — baseline EP: experts sharded over the ``tp`` mesh axis,
+  activations replicated on ``tp`` (they already are, in the FSDP x TP
+  layout), each rank dispatches to its local expert slice and the outputs
+  combine with ONE ``psum`` per layer — the same collective cost as a TP
+  MLP.  This is the paper-faithful "driver" scheme: no token leaves its
+  data shard; only the reduced output is exchanged.
+* ``a2a``   — optimized EP (see EXPERIMENTS.md §Perf): tokens are split
+  over ``tp`` before routing, dispatch buffers travel through
+  ``all_to_all`` to their expert's rank and back.  Moves k/|tp| of the
+  psum's bytes when k < |tp|.
+
+Dispatch uses the sort-based capacity bucket trick (argsort by expert id,
+prefix-offset gather) — O(T·k log) with NO (T, E, C) one-hot tensor, so it
+lowers at the kimi-k2 scale (384 experts, 1M tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers
+from repro.models.config import ModelConfig, ShardCfg
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jnp.ndarray          # load-balance loss (scalar)
+    z_loss: jnp.ndarray            # router logit z-loss (scalar)
+    dropped_frac: jnp.ndarray      # fraction of assignments over capacity
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    std_in, std_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    dt = cfg.param_dtype
+    p = {
+        "router": layers.truncated_normal(kr, (d, e), std_in, jnp.float32),
+        "experts": {
+            "gate": layers.truncated_normal(kg, (e, d, f), std_in, dt),
+            "up": layers.truncated_normal(ku, (e, d, f), std_in, dt),
+            "down": layers.truncated_normal(kd, (e, f, d), std_out, dt),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.init_mlp(
+            ks, d, f * cfg.num_shared_experts, dt)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(np.ceil(tokens * cfg.num_experts_per_tok / cfg.num_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _dispatch_indices(expert_ids: jnp.ndarray, num_experts: int, capacity: int):
+    """Sort-based capacity bucketing.
+
+    expert_ids: (A,) int32 in [0, num_experts]  (== num_experts -> masked out)
+    Returns (assign, valid): for each buffer slot (e, c) flattened to (E*C,),
+    ``assign`` indexes into the (A,) assignment list, ``valid`` marks live
+    slots.  Assignments beyond an expert's capacity are dropped (standard
+    GShard semantics; the dropped fraction is reported in metrics).
+    """
+    a = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids)                     # stable; masked at end
+    counts = jnp.bincount(expert_ids, length=num_experts + 1)[:num_experts]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    slot_e = jnp.repeat(jnp.arange(num_experts), capacity)
+    slot_c = jnp.tile(jnp.arange(capacity), num_experts)
+    valid = slot_c < counts[slot_e]
+    src = jnp.where(valid, starts[slot_e] + slot_c, 0)
+    assign = order[jnp.minimum(src, a - 1)]
+    dropped = 1.0 - jnp.sum(jnp.minimum(counts, capacity)) / jnp.maximum(
+        jnp.sum(counts), 1)
+    return assign, valid, dropped
+
+
+def _expert_ffn(experts: dict, xin: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    """Grouped SwiGLU over the dispatch buffer xin (E, C, d)."""
+    dt = compute_dtype
+    g = jnp.einsum("ecd,edf->ecf", xin, experts["gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xin, experts["up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      experts["down"].astype(dt))
+
+
+def _route(params, cfg: ModelConfig, x2d: jnp.ndarray):
+    """Router: returns (top-k ids (T,k), renormalized gates (T,k), metrics)."""
+    logits = x2d.astype(jnp.float32) @ params["router"]        # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = lax.top_k(probs, cfg.num_experts_per_tok)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance: E * sum_e mean(one_hot assignments)_e * mean(probs)_e
+    pe = probs.mean(axis=0)                                     # (E,)
+    fe = jnp.zeros_like(pe).at[ids.reshape(-1)].add(
+        1.0 / (ids.size))                                       # (E,)
+    aux = cfg.num_experts * jnp.sum(fe * pe) * cfg.router_aux_coef
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.router_z_coef
+    return ids.astype(jnp.int32), gates.astype(jnp.float32), aux, z
+
+
+def _local_moe(params, cfg: ModelConfig, x2d, ids, gates,
+               e_start: int, e_count: int, capacity: int, compute_dtype):
+    """Dispatch/compute/combine for the expert slice [e_start, e_start+e_count).
+
+    x2d (T, d) -> (T, d) partial output (only this slice's contribution).
+    """
+    t, d = x2d.shape
+    k = cfg.num_experts_per_tok
+    flat_ids = ids.reshape(-1)                                   # (T*k,)
+    local = flat_ids - e_start
+    local = jnp.where((local >= 0) & (local < e_count), local, e_count)
+    assign, valid, dropped = _dispatch_indices(local, e_count, capacity)
+    tok = assign // k                                            # (e_count*C,)
+    xin = x2d[tok] * valid[:, None].astype(x2d.dtype)
+    xin = xin.reshape(e_count, capacity, d)
+    y = _expert_ffn(_slice_experts(params["experts"], e_start, e_count),
+                    xin, compute_dtype)
+    y = y.reshape(e_count * capacity, d)
+    w = gates.reshape(-1)[assign] * valid                        # (E*C,)
+    out = jnp.zeros((t, d), y.dtype).at[tok].add(y * w[:, None].astype(y.dtype))
+    return out, dropped
+
+
+def _slice_experts(experts: dict, e_start: int, e_count: int) -> dict:
+    if e_start == 0 and e_count == experts["gate"].shape[0]:
+        return experts
+    return {k: lax.dynamic_slice_in_dim(v, e_start, e_count, axis=0)
+            for k, v in experts.items()}
+
+
+def moe_apply(params, cfg: ModelConfig, x: jnp.ndarray,
+              shard: ShardCfg) -> tuple[jnp.ndarray, MoEMetrics]:
+    """x: (B, S, d) -> (B, S, d).  Shared experts (if any) are always-on."""
+    b, s, d = x.shape
+    cdt = cfg.compute_dtype
+    x2d = x.reshape(b * s, d)
+
+    if shard.mesh is not None and shard.moe_mode == "a2a" and shard.tp:
+        out, aux, z, dropped = _a2a_moe(params, cfg, x, shard)
+    else:
+        ids, gates, aux, z = _route(params, cfg, x2d)
+        if shard.mesh is None or shard.moe_mode == "local" or shard.tp is None:
+            cap = _capacity(b * s, cfg)
+            out, dropped = _local_moe(params, cfg, x2d, ids, gates,
+                                      0, cfg.num_experts, cap, cdt)
+        elif shard.moe_mode == "tp":
+            out, dropped = _tp_moe(params, cfg, x2d, ids, gates, shard)
+        else:
+            raise ValueError(f"unknown moe_mode {shard.moe_mode}")
+
+    if "shared" in params:
+        out = out + layers.mlp(params["shared"], x2d.astype(cdt))
+    return out.reshape(b, s, d).astype(x.dtype), MoEMetrics(aux, z, dropped)
+
+
+# ---------------------------------------------------------------------------
+# tp mode: experts sharded over `tp`; activations replicated on `tp`;
+# each rank computes its slice, combine = one psum (baseline EP).
+# ---------------------------------------------------------------------------
+def _tp_moe(params, cfg: ModelConfig, x2d, ids, gates, shard: ShardCfg):
+    mesh = shard.mesh
+    tp = shard.tp
+    ep = mesh.shape[tp]
+    assert cfg.num_experts % ep == 0, (cfg.num_experts, ep)
+    e_local = cfg.num_experts // ep
+    t = x2d.shape[0]
+    t_local = t // int(np.prod([mesh.shape[a] for a in shard.dp_axes])) \
+        if shard.batch_sharded else t
+    cap = _capacity(t_local, cfg)
+
+    from jax.sharding import PartitionSpec as P
+
+    batch = shard.dp if shard.batch_sharded else None
+
+    def local_shifted(x2d_l, ids_l, gates_l, experts_l):
+        rank = lax.axis_index(tp)
+        e_start = rank * e_local
+        lids = ids_l - e_start
+        lids_flat = jnp.where((lids >= 0) & (lids < e_local), lids, e_local)
+        assign, valid, dropped = _dispatch_indices(
+            lids_flat.reshape(-1), e_local, cap)
+        tok = assign // cfg.num_experts_per_tok
+        xin = x2d_l[tok] * valid[:, None].astype(x2d_l.dtype)
+        xin = xin.reshape(e_local, cap, x2d_l.shape[-1])
+        y = _expert_ffn(experts_l, xin, cfg.compute_dtype)
+        y = y.reshape(e_local * cap, -1)
+        w = gates_l.reshape(-1)[assign] * valid
+        out = jnp.zeros_like(x2d_l, dtype=y.dtype).at[tok].add(
+            y * w[:, None].astype(y.dtype))
+        return lax.psum(out, tp), lax.pmean(dropped, tp)
+
+    fn = jax.shard_map(
+        local_shifted, mesh=mesh,
+        in_specs=(P(batch, None), P(batch, None), P(batch, None),
+                  jax.tree.map(lambda _: P(tp, None, None), params["experts"])),
+        out_specs=(P(batch, None), P()),
+        check_vma=False)
+    return fn(x2d, ids, gates, params["experts"])
+
+
+# ---------------------------------------------------------------------------
+# a2a mode: tokens split over `tp` as well (sequence split of the flat token
+# list); dispatch buffers all_to_all to the owning rank and back.  Each rank
+# routes only its token slice; collective volume ~ 2 * T_local*k/ep * d per
+# direction vs psum's 2 * T_local * d.
+# ---------------------------------------------------------------------------
+def _a2a_moe(params, cfg: ModelConfig, x, shard: ShardCfg):
+    mesh = shard.mesh
+    tp = shard.tp
+    ep = mesh.shape[tp]
+    assert cfg.num_experts % ep == 0
+    e_local = cfg.num_experts // ep
+    b, s, d = x.shape
+    k = cfg.num_experts_per_tok
+
+    from jax.sharding import PartitionSpec as P
+
+    batch = shard.dp if shard.batch_sharded else None
+
+    def local(x_l, experts_l, router):
+        # x_l: (b_l, s_l, d) — sequence additionally split over tp
+        bl, sl, _ = x_l.shape
+        tl = bl * sl
+        x2d = x_l.reshape(tl, d)
+        ids, gates, aux, z = _route({"router": router}, cfg, x2d)
+        # capacity per (source rank, dest expert)
+        cap = _capacity(tl, cfg)
+        flat = ids.reshape(-1)
+        assign, valid, dropped = _dispatch_indices(flat, cfg.num_experts, cap)
+        tok = assign // k
+        xin = (x2d[tok] * valid[:, None].astype(x2d.dtype))
+        xin = xin.reshape(ep, e_local * cap, d)       # group by dest rank
+        xin = lax.all_to_all(xin, tp, split_axis=0, concat_axis=0, tiled=False)
+        # now (ep, e_local*cap, d): source-rank major, my experts only
+        y = _expert_ffn(experts_l,
+                        xin.reshape(ep * e_local, cap, d).reshape(
+                            ep, e_local, cap, d).transpose(1, 0, 2, 3)
+                        .reshape(e_local, ep * cap, d),
+                        cfg.compute_dtype)
+        y = y.reshape(e_local, ep, cap, d).transpose(1, 0, 2, 3) \
+             .reshape(ep, e_local * cap, d)
+        y = lax.all_to_all(y, tp, split_axis=0, concat_axis=0, tiled=False)
+        y = y.reshape(cfg.num_experts * cap, d)
+        w = gates.reshape(-1)[assign] * valid
+        out = jnp.zeros((tl, d), y.dtype).at[tok].add(
+            y * w[:, None].astype(y.dtype))
+        return (out.reshape(bl, sl, d), aux[None], z[None], dropped[None])
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch, tp, None),
+                  jax.tree.map(lambda _: P(tp, None, None), params["experts"]),
+                  P(None, None)),
+        out_specs=(P(batch, tp, None), P(tp), P(tp), P(tp)),
+        check_vma=False)
+    out, aux, z, dropped = fn(x, params["experts"], params["router"])
+    return (out.reshape(b * s, d), aux.mean(), z.mean(), dropped.mean())
+
+
+def moe_flops_per_token(cfg: ModelConfig) -> int:
+    """Forward FLOPs/token of one MoE layer (routed active + shared)."""
+    active = cfg.num_experts_per_tok + cfg.num_shared_experts
+    return 2 * 3 * cfg.d_model * cfg.d_ff * active + 2 * cfg.d_model * cfg.num_experts

@@ -1,0 +1,41 @@
+"""Modality frontend STUBS for the [audio]/[vlm] archs.
+
+Per the assignment, these archs specify the transformer BACKBONE only; the
+modality frontend provides *precomputed* embeddings:
+
+  musicgen-large — EnCodec frame embeddings: the real system runs a frozen
+    EnCodec encoder producing K codebook streams; the backbone consumes the
+    summed codebook embeddings per frame.  Stub: deterministic pseudo-
+    embeddings (B, S, d_model) from a hashed PRNG — shape/dtype-exact.
+
+  paligemma-3b — SigLIP patch embeddings: a 224px/14 ViT gives 256 patch
+    tokens projected to d_model.  Stub: (B, 256, d_model) pseudo-embeddings
+    consumed as a bidirectional prefix (prefix-LM masking).
+
+Both stubs are pure functions of (key, shape) so the data pipeline, smoke
+tests and benchmarks produce identical streams; ``input_specs()`` in
+``launch/dryrun.py`` passes ShapeDtypeStructs of the same shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def frame_embeddings(key, cfg: ModelConfig, batch: int, seq: int,
+                     dtype=None) -> jnp.ndarray:
+    """musicgen: precomputed EnCodec frame embeddings (B, S, d_model)."""
+    dtype = dtype or cfg.compute_dtype
+    return (jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+            / jnp.sqrt(cfg.d_model)).astype(dtype)
+
+
+def patch_embeddings(key, cfg: ModelConfig, batch: int,
+                     dtype=None) -> jnp.ndarray:
+    """paligemma: precomputed SigLIP patch embeddings (B, P, d_model)."""
+    dtype = dtype or cfg.compute_dtype
+    p = cfg.num_prefix_tokens
+    return (jax.random.normal(key, (batch, p, cfg.d_model), jnp.float32)
+            / jnp.sqrt(cfg.d_model)).astype(dtype)

@@ -1,0 +1,371 @@
+"""The decoder layer stack: family-specific block composition under one
+scan-over-layers driver.
+
+Families (ModelConfig.family):
+  dense / audio / vlm  — GQA attention + SwiGLU MLP (pre-norm residual)
+  moe                  — GQA attention + top-k MoE FFN (+ shared experts)
+  hybrid               — Mamba2 blocks with ONE weight-tied shared
+                         attention+MLP block applied every ``attn_every``
+                         layers (zamba2)
+  ssm                  — xLSTM: mLSTM blocks with sLSTM at
+                         ``slstm_indices`` (unrolled; 12 layers)
+
+``scan_layers=True`` stacks identical layers into one ``lax.scan`` body —
+one lowered layer in the HLO (compile time at 94 layers) and the natural
+attachment point for ``jax.checkpoint`` (remat policy).  Heterogeneous
+stacks (hybrid flags, xlstm mixing) handle per-layer structure with
+``lax.cond`` flags / unrolled composition.
+
+Caches (decode/prefill) are stacked along a leading layer axis so they
+thread through the same scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers, mamba2, moe, xlstm
+from repro.models.attention import MaskSpec
+from repro.models.blocks import KVCache, attention, init_attention
+from repro.models.config import ModelConfig, ShardCfg
+
+
+class StackMetrics(NamedTuple):
+    moe_aux: jnp.ndarray
+    moe_z: jnp.ndarray
+    moe_dropped: jnp.ndarray
+
+    @staticmethod
+    def zero():
+        z = jnp.zeros((), jnp.float32)
+        return StackMetrics(z, z, z)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)          # "block": save only layer boundaries
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    """hybrid: number of applications of the shared attention block.
+
+    The stack is organized as ``G = L / attn_every`` uniform groups
+    [shared-attn, mamba × attn_every] so the layer scan has no data-
+    dependent control flow (exact cost attribution in the lowered HLO).
+    """
+    if cfg.family != "hybrid" or not cfg.attn_every:
+        return 0
+    assert cfg.num_layers % cfg.attn_every == 0, (
+        "hybrid stacks require attn_every | num_layers", cfg.num_layers,
+        cfg.attn_every)
+    return cfg.num_layers // cfg.attn_every
+
+
+def _group(cfg: ModelConfig, tree):
+    """Reshape stacked (L, ...) leaves to (G, attn_every, ...)."""
+    g = n_attn_layers(cfg)
+    return jax.tree.map(
+        lambda t: t.reshape(g, cfg.attn_every, *t.shape[1:]), tree)
+
+
+def _ungroup(tree):
+    return jax.tree.map(
+        lambda t: t.reshape(t.shape[0] * t.shape[1], *t.shape[2:]), tree)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_attn_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model),
+        "attn": init_attention(k1, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.head_dim,
+                               cfg.param_dtype, cfg.qkv_bias),
+        "ln2": layers.init_rmsnorm(cfg.d_model),
+        "ffn": (moe.init_moe(k2, cfg) if cfg.family == "moe"
+                else layers.init_mlp(k2, cfg.d_model, cfg.d_ff,
+                                     cfg.param_dtype)),
+    }
+
+
+def init_layer_stack(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, cfg.num_layers)
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        return {"layers": jax.vmap(
+            functools.partial(_init_attn_block, cfg=cfg))(ks)}
+    if cfg.family == "hybrid":
+        stacked = jax.vmap(lambda k: {
+            "ln": layers.init_rmsnorm(cfg.d_model),
+            "mamba": mamba2.init_mamba2(k, cfg)})(ks)
+        return {"layers": stacked,
+                "shared_attn": _init_attn_block(
+                    jax.random.fold_in(key, 1), cfg)}
+    if cfg.family == "ssm":
+        per_layer = tuple(
+            xlstm.init_slstm(ks[i], cfg) if i in cfg.slstm_indices
+            else xlstm.init_mlstm(ks[i], cfg)
+            for i in range(cfg.num_layers))
+        return {"layers": per_layer}
+    raise ValueError(cfg.family)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                cache_dtype=jnp.bfloat16) -> Any:
+    """Decode-time state for the whole stack (family-specific pytree)."""
+    kv = lambda n: KVCache(
+        k=jnp.zeros((n, batch, max_seq, cfg.num_kv_heads, cfg.head_dim),
+                    cache_dtype),
+        v=jnp.zeros((n, batch, max_seq, cfg.num_kv_heads, cfg.head_dim),
+                    cache_dtype))
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        return kv(cfg.num_layers)
+    if cfg.family == "hybrid":
+        st = mamba2.mamba2_init_state(cfg, batch)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), st)
+        return {"mamba": stacked, "attn": kv(n_attn_layers(cfg))}
+    if cfg.family == "ssm":
+        states = []
+        for i in range(cfg.num_layers):
+            states.append(xlstm.slstm_init_state(cfg, batch)
+                          if i in cfg.slstm_indices
+                          else xlstm.mlstm_init_state(cfg, batch))
+        return tuple(states)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# one attention block (dense/moe families + the hybrid shared block)
+# ---------------------------------------------------------------------------
+def _attn_block(p, cfg: ModelConfig, x, shard: ShardCfg, *, positions,
+                mask: MaskSpec, cache=None, cache_len=None):
+    h, new_cache = attention(
+        p["attn"], layers.rmsnorm(p["ln1"], x, cfg.norm_eps),
+        rope_theta=cfg.rope_theta, positions=positions, mask=mask,
+        cache=cache, cache_len=cache_len,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    x = shard.constrain_act(x + h, None, None)
+    y = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, metrics = moe.moe_apply(p["ffn"], cfg, y, shard)
+    else:
+        y = layers.mlp(p["ffn"], y)
+        metrics = StackMetrics.zero()
+    if isinstance(metrics, moe.MoEMetrics):
+        metrics = StackMetrics(metrics.aux_loss, metrics.z_loss,
+                               metrics.dropped_frac)
+    x = shard.constrain_act(x + y.astype(x.dtype), None, None)
+    return x, new_cache, metrics
+
+
+# ---------------------------------------------------------------------------
+# sequence mode (train / prefill)
+# ---------------------------------------------------------------------------
+def stack_seq(params, cfg: ModelConfig, x, shard: ShardCfg, *, positions,
+              mask: MaskSpec, caches=None, mode: str = "train"):
+    """x (B,S,d) -> (x, new_caches, metrics).  mode: train | prefill."""
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        return _seq_attn_stack(params, cfg, x, shard, positions=positions,
+                               mask=mask, caches=caches, mode=mode)
+    if cfg.family == "hybrid":
+        return _seq_hybrid_stack(params, cfg, x, shard, positions=positions,
+                                 mask=mask, caches=caches, mode=mode)
+    if cfg.family == "ssm":
+        return _seq_xlstm_stack(params, cfg, x, caches=caches, mode=mode)
+    raise ValueError(cfg.family)
+
+
+def _seq_attn_stack(params, cfg, x, shard, *, positions, mask, caches, mode):
+    stacked = params["layers"]
+
+    def body(x, layer_in):
+        lp, cache = layer_in
+        x, new_cache, met = _attn_block(lp, cfg, x, shard,
+                                        positions=positions, mask=mask,
+                                        cache=cache)
+        return x, (new_cache, met)
+
+    body = _remat(body, cfg)
+    if mode == "train":
+        xs = (stacked, None)
+        body_nc = lambda c, lp: (lambda r: (r[0], r[1][1]))(body(c, (lp, None)))
+        if cfg.scan_layers:
+            x, mets = lax.scan(body_nc, x, stacked)
+        else:
+            mets = []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda t: t[i], stacked)
+                x, met = body_nc(x, lp)
+                mets.append(met)
+            mets = jax.tree.map(lambda *ts: jnp.stack(ts), *mets)
+        return x, None, jax.tree.map(jnp.sum, mets)
+    # prefill: thread caches as xs/ys
+    if cfg.scan_layers:
+        x, (new_caches, mets) = lax.scan(body, x, (stacked, caches))
+    else:
+        ncs, mets = [], []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], stacked)
+            cache = jax.tree.map(lambda t: t[i], caches)
+            x, (nc, met) = body(x, (lp, cache))
+            ncs.append(nc)
+            mets.append(met)
+        new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *ncs)
+        mets = jax.tree.map(lambda *ts: jnp.stack(ts), *mets)
+    return x, new_caches, jax.tree.map(jnp.sum, mets)
+
+
+def _seq_hybrid_stack(params, cfg, x, shard, *, positions, mask, caches,
+                      mode):
+    """Group scan: each iteration = shared attn block + attn_every mamba
+    layers.  Caches: attn KV stacked (G, ...) as scan xs/ys; mamba states
+    stacked (L, ...) regrouped to (G, E, ...)."""
+    grouped = _group(cfg, params["layers"])
+    shared = params["shared_attn"]
+    attn_caches = caches["attn"] if caches is not None else None
+    mamba_states = (_group(cfg, caches["mamba"])
+                    if caches is not None else None)
+    with_caches = caches is not None
+
+    def one_group(x, gp, acache, mstates):
+        x, new_acache, _ = _attn_block(shared, cfg, x, shard,
+                                       positions=positions, mask=mask,
+                                       cache=acache)
+        new_ms = []
+        for e in range(cfg.attn_every):
+            lp = jax.tree.map(lambda t: t[e], gp)
+            ms = (jax.tree.map(lambda t: t[e], mstates)
+                  if mstates is not None else None)
+            h, nm = mamba2.mamba2_seq(
+                lp["mamba"], cfg, layers.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                shard, state=ms, return_state=with_caches)
+            x = shard.constrain_act(x + h.astype(x.dtype), None, None)
+            new_ms.append(nm)
+        new_mstates = (jax.tree.map(lambda *ts: jnp.stack(ts), *new_ms)
+                       if with_caches else None)
+        return x, new_acache, new_mstates
+
+    def body(x, group_in):
+        gp, acache, mstates = group_in
+        x, new_acache, new_mstates = one_group(x, gp, acache, mstates)
+        return x, (new_acache, new_mstates)
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        x, (new_attn, new_mamba) = lax.scan(
+            body, x, (grouped, attn_caches, mamba_states))
+    else:
+        nas, nms = [], []
+        g = n_attn_layers(cfg)
+        for i in range(g):
+            gp = jax.tree.map(lambda t: t[i], grouped)
+            ac = (jax.tree.map(lambda t: t[i], attn_caches)
+                  if attn_caches is not None else None)
+            ms = (jax.tree.map(lambda t: t[i], mamba_states)
+                  if mamba_states is not None else None)
+            x, (na, nm) = body(x, (gp, ac, ms))
+            nas.append(na)
+            nms.append(nm)
+        stack = lambda ts: (jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+                            if with_caches else None)
+        new_attn, new_mamba = stack(nas), stack(nms)
+    new_caches = ({"mamba": _ungroup(new_mamba), "attn": new_attn}
+                  if with_caches else None)
+    return x, new_caches, StackMetrics.zero()
+
+
+def _seq_xlstm_stack(params, cfg, x, *, caches, mode):
+    new_states = []
+    want_state = caches is not None
+    for i, lp in enumerate(params["layers"]):
+        st = caches[i] if caches is not None else None
+        fn = (xlstm.slstm_seq if i in cfg.slstm_indices else xlstm.mlstm_seq)
+        x, ns = fn(lp, cfg, x, state=st, return_state=want_state)
+        new_states.append(ns)
+    return x, (tuple(new_states) if want_state else None), StackMetrics.zero()
+
+
+# ---------------------------------------------------------------------------
+# step mode (single-token decode)
+# ---------------------------------------------------------------------------
+def stack_step(params, cfg: ModelConfig, x, shard: ShardCfg, *, caches,
+               cache_len):
+    """x (B,1,d), caches filled to cache_len -> (x, new_caches).
+
+    ``cache_len`` is a scalar (uniform batch) or a (B,) vector (continuous
+    batching: per-slot fill levels and rope positions)."""
+    if getattr(cache_len, "ndim", 0) >= 1:
+        positions = cache_len.reshape(-1, 1)     # (B, 1) per-slot rope
+    else:
+        positions = jnp.atleast_1d(cache_len)
+    mask = MaskSpec(causal=True, q_offset=0)
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        stacked = params["layers"]
+
+        def body(x, layer_in):
+            lp, cache = layer_in
+            x, new_cache, _ = _attn_block(lp, cfg, x, shard,
+                                          positions=positions, mask=mask,
+                                          cache=cache, cache_len=cache_len)
+            return x, new_cache
+
+        if cfg.scan_layers:
+            x, new_caches = lax.scan(body, x, (stacked, caches))
+        else:
+            ncs = []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda t: t[i], stacked)
+                cache = jax.tree.map(lambda t: t[i], caches)
+                x, nc = body(x, (lp, cache))
+                ncs.append(nc)
+            new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *ncs)
+        return x, new_caches
+
+    if cfg.family == "hybrid":
+        grouped = _group(cfg, params["layers"])
+        shared = params["shared_attn"]
+        mamba_states = _group(cfg, caches["mamba"])
+
+        def body(x, group_in):
+            gp, acache, mstates = group_in
+            x, new_acache, _ = _attn_block(
+                shared, cfg, x, shard, positions=positions, mask=mask,
+                cache=acache, cache_len=cache_len)
+            new_ms = []
+            for e in range(cfg.attn_every):
+                lp = jax.tree.map(lambda t: t[e], gp)
+                ms = jax.tree.map(lambda t: t[e], mstates)
+                h, nm = mamba2.mamba2_step(
+                    lp["mamba"], cfg,
+                    layers.rmsnorm(lp["ln"], x[:, 0], cfg.norm_eps), ms)
+                x = x + h[:, None].astype(x.dtype)
+                new_ms.append(nm)
+            new_mstates = jax.tree.map(lambda *ts: jnp.stack(ts), *new_ms)
+            return x, (new_acache, new_mstates)
+
+        x, (new_attn, new_mamba) = lax.scan(
+            body, x, (grouped, caches["attn"], mamba_states))
+        return x, {"mamba": _ungroup(new_mamba), "attn": new_attn}
+
+    if cfg.family == "ssm":
+        new_states = []
+        xt = x[:, 0]
+        for i, lp in enumerate(params["layers"]):
+            if i in cfg.slstm_indices:
+                xt, ns = xlstm.slstm_step(lp, cfg, xt, caches[i])
+            else:
+                xt, ns = xlstm.mlstm_step(lp, cfg, xt, caches[i])
+            new_states.append(ns)
+        return xt[:, None], tuple(new_states)
+    raise ValueError(cfg.family)

@@ -1,0 +1,302 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential) — the ``ssm`` family arch.
+
+The mLSTM is a linear-attention-style recurrence
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T      n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t * (C_t q_t) / max(|n_t q_t|, 1)
+
+which is exactly the :func:`repro.models.mamba2.ssd_core` recursion with
+decoupled (decay, input-scale) = (sigmoid(f̃), exp(ĩ)); the normalizer n is
+carried as one extra value-channel (x augmented with a ones column), so
+train/prefill reuse the chunked SSD machinery — the paper's "tile the time
+axis, carry a tiny ghost state between chunks" pattern.  Stabilization
+deviation from the reference implementation is documented in DESIGN.md:
+the input-gate logit is soft-capped (±8) instead of carrying the running
+max-state m_t through the parallel form; fp32 throughout the cell.
+
+The sLSTM has per-head block-diagonal *recurrent* gate connections
+(gates at t see h_{t-1}), which makes it non-parallelizable over time —
+implemented as a ``lax.scan`` (the paper's own characterization).
+
+Decode is O(1)-state for both cell types, so xlstm-125m runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers
+from repro.models.config import ModelConfig, ShardCfg
+from repro.models.mamba2 import ssd_core
+
+_GATE_CAP = 8.0  # soft-cap on the mLSTM input-gate logit (stabilization)
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray      # (B, H, N, P) matrix memory, fp32
+    n: jnp.ndarray      # (B, H, N)    normalizer, fp32
+    conv: jnp.ndarray   # (B, W-1, d_inner) causal-conv tail, fp32
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray      # (B, H, P) cell, fp32
+    n: jnp.ndarray      # (B, H, P) normalizer, fp32
+    m: jnp.ndarray      # (B, H, P) max-state (log-space stabilizer), fp32
+    h: jnp.ndarray      # (B, H, P) previous output (recurrent input), fp32
+
+
+def _dims(cfg: ModelConfig):
+    h = cfg.num_heads
+    d_inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    d_inner = -(-d_inner // h) * h                    # round up to head mult
+    return h, d_inner, d_inner // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block: ln -> up-proj (u, z) -> conv(u) -> q,k | v -> mLSTM cell
+#              -> group-norm -> *silu(z) -> down-proj -> residual
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    h, di, p = _dims(cfg)
+    dt = cfg.param_dtype
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    w = cfg.conv_width
+    return {
+        "up": layers.init_dense(k1, cfg.d_model, 2 * di, dt),
+        "conv_w": layers.truncated_normal(k2, (w, di), 1.0 / np.sqrt(w),
+                                          jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": layers.init_dense(k3, di, di, dt),
+        "wk": layers.init_dense(k4, di, di, dt),
+        "wv": layers.init_dense(k5, di, di, dt),
+        # gates are scalar per head, computed from the block input
+        "wi": layers.init_dense(jax.random.fold_in(key, 7), cfg.d_model, h,
+                                jnp.float32),
+        "wf": layers.init_dense(jax.random.fold_in(key, 8), cfg.d_model, h,
+                                jnp.float32),
+        # forget bias init positive => long memory at init (paper's init)
+        "bf": jnp.full((h,), 3.0, jnp.float32),
+        "bi": jnp.full((h,), -2.0, jnp.float32),
+        "norm": layers.init_rmsnorm(di),
+        "down": layers.init_dense(k6, di, cfg.d_model, dt,
+                                  stddev=1.0 / np.sqrt(di)),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    h, di, p = _dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, h, p, p + 1), jnp.float32),
+        n=jnp.zeros((batch, h, p), jnp.float32),   # kept for API symmetry
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32))
+
+
+def _mlstm_gates(params, x, h):
+    """(B,S,H) fp32 (log_decay, in_scale) from the block input."""
+    xf = x.astype(jnp.float32)
+    f_logit = layers.dense(params["wf"], xf) + params["bf"]
+    i_logit = layers.dense(params["wi"], xf) + params["bi"]
+    i_logit = _GATE_CAP * jnp.tanh(i_logit / _GATE_CAP)      # soft-cap
+    log_decay = jax.nn.log_sigmoid(f_logit)                  # (B,S,H) <= 0
+    in_scale = jnp.exp(i_logit)
+    return log_decay, in_scale
+
+
+def _mlstm_qkv(params, cfg, x, conv_prefix):
+    """Up-project, causal-conv, and split into q,k,v,z.  Returns fp32 qkv."""
+    h, di, p = _dims(cfg)
+    up = layers.dense(params["up"], x.astype(cfg.compute_dtype))
+    u, z = up[..., :di], up[..., di:]
+    w = cfg.conv_width
+    b, s, _ = u.shape
+    if conv_prefix is None:
+        conv_prefix = jnp.zeros((b, w - 1, di), u.dtype)
+    upad = jnp.concatenate([conv_prefix.astype(u.dtype), u], axis=1)
+    uc = sum(upad[:, i:i + s].astype(jnp.float32) * params["conv_w"][i]
+             for i in range(w))
+    uc = jax.nn.silu(uc + params["conv_b"])
+    q = layers.dense(params["wq"], uc.astype(cfg.compute_dtype))
+    k = layers.dense(params["wk"], uc.astype(cfg.compute_dtype))
+    v = layers.dense(params["wv"], u)                        # v skips the conv
+    split = lambda t: t.reshape(b, s, h, p).astype(jnp.float32)
+    new_prefix = jnp.concatenate([conv_prefix.astype(u.dtype), u],
+                                 axis=1)[:, -(w - 1):]
+    return split(q), split(k), split(v), z, new_prefix
+
+
+def _mlstm_out(params, cfg, hval, z, x):
+    h, di, p = _dims(cfg)
+    b, s = hval.shape[:2]
+    y = hval.reshape(b, s, di).astype(cfg.compute_dtype)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return x + layers.dense(params["down"], y).astype(x.dtype)
+
+
+def mlstm_seq(params, cfg: ModelConfig, x, state: MLSTMState | None = None,
+              return_state: bool = False):
+    """Full-sequence mLSTM block (train/prefill).  x (B,S,d_model)."""
+    h, di, p = _dims(cfg)
+    b, s, _ = x.shape
+    q, k, v, z, new_conv = _mlstm_qkv(
+        params, cfg, x, state.conv if state is not None else None)
+    log_decay, in_scale = _mlstm_gates(params, x, h)
+    # ssd_core layout: G=H heads, R=1; n_t carried as extra value channel
+    scale = 1.0 / np.sqrt(p)
+    v_aug = jnp.concatenate([v, jnp.ones((b, s, h, 1), jnp.float32)], -1)
+    y_aug, final = ssd_core(
+        v_aug[:, :, :, None, :],                 # x    (B,S,H,1,P+1)
+        log_decay[..., None],                    # (B,S,H,1)
+        in_scale[..., None],
+        k * scale,                               # b_ (B,S,H,N)
+        q,                                       # c_ (B,S,H,N)
+        cfg.ssm_chunk,
+        state.c[:, :, None] if state is not None else None)
+    y_aug = y_aug[:, :, :, 0]                    # (B,S,H,P+1)
+    hval = y_aug[..., :p] / jnp.maximum(jnp.abs(y_aug[..., p:]), 1.0)
+    out = _mlstm_out(params, cfg, hval, z, x)
+    if not return_state:
+        return out, None
+    return out, MLSTMState(c=final[:, :, 0], n=final[:, :, 0, :, p],
+                           conv=new_conv.astype(jnp.float32))
+
+
+def mlstm_step(params, cfg: ModelConfig, x_t, state: MLSTMState):
+    """Single-token decode.  x_t (B, d_model) -> (y, state).  O(1) state."""
+    h, di, p = _dims(cfg)
+    b = x_t.shape[0]
+    x1 = x_t[:, None, :]
+    up = layers.dense(params["up"], x1.astype(cfg.compute_dtype))
+    u, z = up[..., :di], up[..., di:]
+    window = jnp.concatenate([state.conv, u.astype(jnp.float32)], axis=1)
+    uc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, params["conv_w"])
+                     + params["conv_b"])[:, None]
+    q = layers.dense(params["wq"], uc.astype(cfg.compute_dtype))
+    k = layers.dense(params["wk"], uc.astype(cfg.compute_dtype))
+    v = layers.dense(params["wv"], u)
+    rs = lambda t: t.reshape(b, h, p).astype(jnp.float32)
+    q, k, v = rs(q), rs(k), rs(v)
+    log_decay, in_scale = _mlstm_gates(params, x1, h)
+    f = jnp.exp(log_decay[:, 0])[..., None, None]            # (B,H,1,1)
+    i = in_scale[:, 0][..., None, None]
+    k = k / np.sqrt(p)
+    v_aug = jnp.concatenate([v, jnp.ones((b, h, 1), jnp.float32)], -1)
+    c_new = f * state.c + i * k[..., :, None] * v_aug[..., None, :]
+    y_aug = jnp.einsum("bhn,bhnp->bhp", q, c_new)            # (B,H,P+1)
+    hval = y_aug[..., :p] / jnp.maximum(jnp.abs(y_aug[..., p:]), 1.0)
+    out = _mlstm_out(params, cfg, hval[:, None], z, x1)[:, 0]
+    new_state = MLSTMState(c=c_new, n=c_new[..., p], conv=window[:, 1:])
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block: ln -> sLSTM cell (recurrent gates, scan) -> group norm
+#              -> GeLU MLP (pf 4/3) -> residual
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    h = cfg.num_heads
+    p = cfg.d_model // h
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    d_up = int(cfg.d_model * 4 / 3)
+    gate = lambda k: layers.init_dense(k, cfg.d_model, h * p, jnp.float32)
+    # recurrent block-diagonal per-head matrices (H, P, P)
+    rec = lambda k: layers.truncated_normal(k, (h, p, p), 1.0 / np.sqrt(p),
+                                            jnp.float32)
+    return {
+        "wz": gate(ks[0]), "wi": gate(ks[1]), "wf": gate(ks[2]), "wo": gate(ks[3]),
+        "rz": rec(ks[4]), "ri": rec(jax.random.fold_in(key, 10)),
+        "rf": rec(jax.random.fold_in(key, 11)), "ro": rec(jax.random.fold_in(key, 12)),
+        "bz": jnp.zeros((h, p), jnp.float32),
+        "bi": jnp.zeros((h, p), jnp.float32),
+        "bf": jnp.full((h, p), 3.0, jnp.float32),
+        "bo": jnp.zeros((h, p), jnp.float32),
+        "norm": layers.init_rmsnorm(cfg.d_model),
+        "mlp_up": layers.init_dense(ks[5], cfg.d_model, d_up, dt),
+        "mlp_down": layers.init_dense(ks[6], d_up, cfg.d_model, dt,
+                                      stddev=1.0 / np.sqrt(d_up)),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    h = cfg.num_heads
+    p = cfg.d_model // h
+    z = jnp.zeros((batch, h, p), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full_like(z, -1e30), h=z)
+
+
+def _slstm_cell(params, gates_x, state: SLSTMState):
+    """One stabilized sLSTM step.  gates_x: dict of (B,H,P) pre-activations
+    from the input path; recurrent contributions added here."""
+    hp = state.h
+    rec = lambda r: jnp.einsum("bhp,hpq->bhq", hp, params[r])
+    z = jnp.tanh(gates_x["z"] + rec("rz") + params["bz"])
+    i_log = gates_x["i"] + rec("ri") + params["bi"]
+    f_log = jax.nn.log_sigmoid(gates_x["f"] + rec("rf") + params["bf"])
+    o = jax.nn.sigmoid(gates_x["o"] + rec("ro") + params["bo"])
+    m_new = jnp.maximum(f_log + state.m, i_log)
+    i_s = jnp.exp(i_log - m_new)
+    f_s = jnp.exp(f_log + state.m - m_new)
+    c = f_s * state.c + i_s * z
+    n = f_s * state.n + i_s
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, m=m_new, h=h_new)
+
+
+def _slstm_gates_x(params, cfg, x):
+    """Input-path gate pre-activations: (B,S,H,P) each, fp32."""
+    h = cfg.num_heads
+    p = cfg.d_model // h
+    xf = x.astype(jnp.float32)
+    g = lambda w: layers.dense(params[w], xf).reshape(*x.shape[:-1], h, p)
+    return {"z": g("wz"), "i": g("wi"), "f": g("wf"), "o": g("wo")}
+
+
+def slstm_seq(params, cfg: ModelConfig, x, state: SLSTMState | None = None,
+              return_state: bool = False):
+    """Full-sequence sLSTM (sequential lax.scan over time).  x (B,S,d)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    p = d // h
+    gx = _slstm_gates_x(params, cfg, x)
+    s0 = state if state is not None else slstm_init_state(cfg, b)
+
+    def body(st, g_t):
+        st = _slstm_cell(params, g_t, st)
+        return st, st.h
+
+    gx_t = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), gx)   # (S,B,H,P)
+    final, hs = lax.scan(body, s0, gx_t,
+                         unroll=min(cfg.slstm_unroll, s))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)                # (B,S,d)
+    out = _slstm_mlp(params, cfg, y, x)
+    return out, (final if return_state else None)
+
+
+def slstm_step(params, cfg: ModelConfig, x_t, state: SLSTMState):
+    """Single-token decode.  x_t (B, d)."""
+    gx = _slstm_gates_x(params, cfg, x_t[:, None])
+    st = _slstm_cell(params, jax.tree.map(lambda t: t[:, 0], gx), state)
+    y = st.h.reshape(x_t.shape)
+    return _slstm_mlp(params, cfg, y[:, None], x_t[:, None])[:, 0], st
+
+
+def _slstm_mlp(params, cfg, y, x):
+    y = layers.rmsnorm(params["norm"], y.astype(cfg.compute_dtype),
+                       cfg.norm_eps)
+    y = layers.dense(params["mlp_down"],
+                     jax.nn.gelu(layers.dense(params["mlp_up"], y)))
+    return x + y.astype(x.dtype)
+
+
+def xlstm_flops_per_token(cfg: ModelConfig) -> int:
+    """Approx fwd FLOPs/token of one mLSTM block (projections dominate)."""
+    h, di, p = _dims(cfg)
+    d = cfg.d_model
+    proj = 2 * d * 2 * di + 3 * 2 * di * di + 2 * di * d
+    cell = 2 * cfg.ssm_chunk * h * p * (p + 1) * 2
+    return proj + cell

@@ -1,0 +1,97 @@
+"""AdamW with dtype-configurable state — pure JAX (no optax dependency).
+
+State dtypes matter at the kimi-k2 scale: 1T params × (4+4+4)B of fp32
+master+m+v = 12 TB > 512 chips × 16 GB.  ``m_dtype/v_dtype=bf16`` and
+bf16 params bring the optimizer residency to 1T × (2+2+2) = 6 TB, which
+fits (see EXPERIMENTS.md §Dry-run).  Update math always runs in fp32;
+states are cast on read/write (stochastic-rounding-free bf16 moments are
+the standard large-scale compromise, cf. PaLM/LLaMA recipes).
+
+Optimizer state inherits the param PartitionSpecs (ZeRO: each FSDP shard
+updates only its slice — SPMD derives this from the shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    m_dtype: Any = jnp.float32
+    v_dtype: Any = jnp.float32
+    clip_norm: float | None = 1.0
+    # decay mask: paths whose params skip weight decay (norms, biases)
+    decay_filter: Callable[[str], bool] = staticmethod(
+        lambda path: not any(s in path for s in ("norm", "scale", "bias",
+                                                 "/b", "A_log", "dt_bias")))
+
+    def init(self, params) -> AdamWState:
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(lambda p: jnp.zeros(p.shape, self.m_dtype), params),
+            v=jax.tree.map(lambda p: jnp.zeros(p.shape, self.v_dtype), params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state, stats)."""
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.ones((), jnp.float32)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        g_flat = jax.tree.leaves(grads)
+        m_flat = jax.tree.leaves(state.m)
+        v_flat = jax.tree.leaves(state.v)
+        new_p, new_m, new_v = [], [], []
+        for (path, p), g, m, v in zip(flat, g_flat, m_flat, v_flat):
+            gf = g.astype(jnp.float32) * scale
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + self.eps)
+            from repro.dist.sharding import _path_str
+            if self.weight_decay and self.decay_filter(_path_str(path)):
+                upd = upd + self.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+            new_m.append(mf.astype(self.m_dtype))
+            new_v.append(vf.astype(self.v_dtype))
+
+        unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+        return (unflat(new_p),
+                AdamWState(step=step, m=unflat(new_m), v=unflat(new_v)),
+                {"grad_norm": gnorm, "lr": lr,
+                 "clip_scale": scale})
+
+    def state_spec_tree(self, param_specs):
+        """Optimizer-state PartitionSpecs mirror the param specs."""
+        from jax.sharding import PartitionSpec as P
+
+        return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

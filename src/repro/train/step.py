@@ -1,0 +1,214 @@
+"""Train / prefill / serve step factories — the functions the launcher
+jits (and the dry-run lowers) with explicit in/out shardings.
+
+``make_train_step`` supports gradient accumulation (microbatching): the
+global batch is split into ``grad_accum`` microbatches scanned
+sequentially, gradients accumulated in fp32 — the standard way to hold
+global batch 256×4096 tokens without activation OOM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import model
+from repro.models.config import ModelConfig, ShardCfg
+from repro.optim.adamw import AdamW, AdamWState
+
+
+def make_loss_fn(cfg: ModelConfig, shard: ShardCfg):
+    def lfn(params, batch):
+        return model.loss_fn(params, cfg, batch, shard)
+
+    return lfn
+
+
+def make_train_step(cfg: ModelConfig, shard: ShardCfg, opt: AdamW,
+                    grad_accum: int = 1):
+    """Standard pjit train step (FSDP×TP — SPMD places the collectives).
+
+    When ``shard.replicate_params`` (small-model pure-DP posture), the
+    loss+grad is computed under an explicit shard_map with ONE final
+    gradient pmean: SPMD cannot hoist all-reduces out of ``while`` loops,
+    so recurrent archs (sLSTM BPTT) would otherwise all-reduce the
+    weight-grad partials EVERY timestep (measured: 8,209 ARs/step on
+    xlstm train_4k — see EXPERIMENTS.md §Perf-xlstm).
+    """
+    if shard.mesh is not None and shard.replicate_params:
+        return _make_dp_train_step(cfg, shard, opt, grad_accum)
+    lfn = make_loss_fn(cfg, shard)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if grad_accum == 1:
+            (loss, met), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % grad_accum == 0, (b, grad_accum)
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                loss_acc, met_acc, g_acc = carry
+                (l, m), g = jax.value_and_grad(lfn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                met_acc = jax.tree.map(jnp.add, met_acc, m)
+                return (loss_acc + l, met_acc, g_acc), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"ce": 0.0, "acc": 0.0, "moe_aux": 0.0, "moe_z": 0.0,
+                      "moe_dropped": 0.0}
+            zero_m = jax.tree.map(lambda x: jnp.zeros((), jnp.float32), zero_m)
+            (loss, met, grads), _ = lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_m, zero_g), micro)
+            inv = 1.0 / grad_accum
+            loss = loss * inv
+            met = jax.tree.map(lambda x: x * inv, met)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        params, opt_state, stats = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **met, **stats}
+
+    return train_step
+
+
+def _make_dp_train_step(cfg: ModelConfig, shard: ShardCfg, opt: AdamW,
+                        grad_accum: int = 1, compress_pod_grads: bool = False):
+    """pmap-style DP: per-shard local autodiff (no collectives inside the
+    model), one pmean of the grad tree, replicated optimizer update.
+
+    ``compress_pod_grads``: reduce at full precision within a pod (ICI),
+    then int8 error-feedback all-reduce across the ``pod`` axis (DCN-class
+    links) — 4× fewer inter-pod wire bytes; the EF residual threads through
+    the step as a third state argument (dist/compression.py).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.config import ShardCfg as SC
+
+    local_shard = SC(mesh=None, moe_mode="local")   # pure-local math
+    lfn = make_loss_fn(cfg, local_shard)
+    axes = tuple(shard.dp_axes)
+    pod_axes = tuple(a for a in axes if a == "pod")
+    intra_axes = tuple(a for a in axes if a != "pod")
+
+    n_pod = (shard.mesh.shape["pod"]
+             if (compress_pod_grads and "pod" in shard.mesh.axis_names)
+             else 0)
+
+    def train_step(params, opt_state: AdamWState, batch, ef_err=None):
+        """ef_err (compression only): pytree with a leading (n_pod,) axis —
+        per-pod error-feedback residuals (values differ across pods, so
+        they carry an explicit axis rather than a replicated spec)."""
+        def local(params, batch, ef_err):
+            if grad_accum == 1:
+                (loss, met), grads = jax.value_and_grad(
+                    lfn, has_aux=True)(params, batch)
+            else:
+                def split(x):
+                    b = x.shape[0]
+                    return x.reshape(grad_accum, b // grad_accum,
+                                     *x.shape[1:])
+
+                def body(carry, mb):
+                    l_acc, g_acc = carry
+                    (l, m), g = jax.value_and_grad(
+                        lfn, has_aux=True)(params, mb)
+                    return (l_acc + l, jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)), m
+
+                zero_g = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), mets = lax.scan(
+                    body, (jnp.zeros((), jnp.float32), zero_g),
+                    jax.tree.map(split, batch))
+                loss = loss / grad_accum
+                grads = jax.tree.map(lambda g: g / grad_accum, grads)
+                met = jax.tree.map(lambda x: x[-1], mets)
+            if n_pod:
+                from repro.dist.compression import ef_allreduce_mean
+
+                if intra_axes:      # full-precision reduce inside the pod
+                    grads = jax.tree.map(
+                        lambda g: lax.pmean(g, intra_axes), grads)
+                flat_g, tdef = jax.tree_util.tree_flatten(grads)
+                flat_e = jax.tree.leaves(ef_err)
+                out_g, out_e = [], []
+                for g, e in zip(flat_g, flat_e):
+                    gm, ne = ef_allreduce_mean(g.astype(jnp.float32), e[0],
+                                               "pod")
+                    out_g.append(gm)
+                    out_e.append(ne[None])          # keep the pod axis
+                grads = jax.tree_util.tree_unflatten(tdef, out_g)
+                new_ef = jax.tree_util.tree_unflatten(tdef, out_e)
+            else:
+                grads = lax.pmean(grads, axes)      # THE one collective
+                new_ef = ef_err
+            loss = lax.pmean(loss, axes)
+            met = jax.tree.map(lambda x: lax.pmean(x, axes), met)
+            return loss, met, grads, new_ef
+
+        bspecs = jax.tree.map(
+            lambda _: P(shard.dp if shard.batch_sharded else None), batch)
+        pspec = jax.tree.map(lambda _: P(), params)
+        mspec = jax.tree.map(lambda _: P(), {
+            "ce": 0, "acc": 0, "moe_aux": 0, "moe_z": 0, "moe_dropped": 0})
+        if n_pod:
+            if ef_err is None:
+                ef_err = jax.tree.map(
+                    lambda p: jnp.zeros((n_pod,) + p.shape, jnp.float32),
+                    params)
+            ef_spec = jax.tree.map(lambda _: P("pod"), params)
+            fn = jax.shard_map(
+                local, mesh=shard.mesh,
+                in_specs=(pspec, bspecs, ef_spec),
+                out_specs=(P(), mspec, pspec, ef_spec),
+                check_vma=False)
+            loss, met, grads, new_ef = fn(params, batch, ef_err)
+        else:
+            fn = jax.shard_map(
+                lambda p, b: local(p, b, None)[:3], mesh=shard.mesh,
+                in_specs=(pspec, bspecs),
+                out_specs=(P(), mspec, pspec),
+                check_vma=False)
+            loss, met, grads = fn(params, batch)
+            new_ef = None
+        params, opt_state, stats = opt.update(grads, opt_state, params)
+        out = {"loss": loss, **met, **stats}
+        if n_pod:
+            out["ef_err"] = new_ef
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shard: ShardCfg):
+    def prefill_step(params, batch, caches):
+        return model.prefill(params, cfg, batch, caches, shard)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, shard: ShardCfg, *, greedy: bool = True,
+                    temperature: float = 1.0):
+    """One decode step: token -> (next_token, logits, caches)."""
+
+    def serve_step(params, token, caches, cache_len, rng=None):
+        logits, caches = model.decode_step(params, cfg, token, caches,
+                                           cache_len, shard)
+        lg = logits[:, -1].astype(jnp.float32)
+        if greedy or rng is None:
+            nxt = jnp.argmax(lg, axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, lg / temperature, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], logits, caches
+
+    return serve_step

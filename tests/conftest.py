@@ -1,0 +1,7 @@
+# Make `tests.helpers` importable regardless of invocation directory, and
+# keep the main session at exactly 1 CPU device (multi-device behaviour is
+# exercised in subprocesses; the 512-device dry-run sets XLA_FLAGS itself).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

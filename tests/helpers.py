@@ -1,0 +1,38 @@
+"""Test helpers: run snippets in a subprocess with a forced device count.
+
+JAX locks the backend device count at first initialization, and the main
+test session must see exactly 1 CPU device (smoke tests exercise the
+single-device paths).  Multi-device behaviour (halo exchange over a real
+mesh, sharded checkpointing, dry-runs) is therefore tested in subprocesses
+with ``--xla_force_host_platform_device_count``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(script: str, n_devices: int = 8, timeout: int = 600):
+    """Run ``script`` with ``n_devices`` fake host devices; return stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}"
+        )
+    return proc.stdout

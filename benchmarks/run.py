@@ -10,7 +10,7 @@ import json
 import sys
 import time
 
-BENCHES = ["stencil", "cavity", "scaling", "roofline"]
+BENCHES = ["stencil", "cavity", "ensemble", "scaling", "roofline"]
 
 
 def main():

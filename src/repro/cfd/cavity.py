@@ -56,12 +56,33 @@ GHIA_RE100_V = np.array([
 ])
 
 
-def config(n: int = 64, nz: int = 4, re: float = 100.0, **kw) -> CFDConfig:
+def config(n: int = 64, nz: int = 4, re: float = 100.0,
+           lid_velocity: float = 1.0, **kw) -> CFDConfig:
     nu = 1.0 / re
     base = CFDConfig(shape=(n, n, nz), nu=nu)
     dt = kw.pop("dt", 0.8 * base.cfl(1.0))
     return CFDConfig(shape=(n, n, nz), extent=1.0, nu=nu, dt=dt,
-                     case="cavity", lid_velocity=1.0, **kw)
+                     case="cavity", lid_velocity=lid_velocity, **kw)
+
+
+def sim_request(n: int = 32, re: float = 100.0, *, steps: int | None = None,
+                t_end: float | None = None, tag: str = "",
+                steady_tol: float | None = None, **kw):
+    """A farm request for one cavity run (slot-parameterized setup).
+
+    ``re``/``lid_velocity``/``forcing`` land in the per-slot scalar struct;
+    grid and solver structure come from ``config(n, **kw)`` and must match
+    the farm's static signature.  Give either ``steps`` or ``t_end``.
+    """
+    from repro.sim.farm import SimRequest  # lazy: cfd must not require sim
+
+    cfg = config(n, re=re, **kw)
+    if steps is None:
+        if t_end is None:
+            raise ValueError("give either steps= or t_end=")
+        steps = int(round(t_end / cfg.dt))
+    return SimRequest(config=cfg, steps=steps,
+                      tag=tag or f"cavity-re{re:g}", steady_tol=steady_tol)
 
 
 def centerline_u(solver: NavierStokes3D, state) -> tuple[np.ndarray, np.ndarray]:

@@ -50,6 +50,7 @@ class CFDConfig:
     dt: float = 2.5e-3
     case: str = "cavity"                     # "cavity" | "taylor_green"
     lid_velocity: float = 1.0
+    forcing: tuple[float, float, float] = (0.0, 0.0, 0.0)
     jacobi_iters: int = 40
     jacobi_omega: float = 1.0
     fused_sweeps: int = 1                    # >1: communication-avoiding smoother
@@ -65,6 +66,26 @@ class CFDConfig:
         """Stable dt bound: advective + viscous."""
         h = self.h
         return min(0.5 * h / max(umax, 1e-12), h * h / (6.0 * self.nu) * 0.9)
+
+
+# The per-simulation runtime parameters: everything that may vary between
+# ensemble members sharing one compiled step.  Grid geometry (shape, h) and
+# solver structure (iterations, overlap, template) stay static — they select
+# the compiled executable; these select the physics, as traced f32 scalars.
+PARAM_KEYS = ("nu", "dt", "lid_velocity", "fx", "fy", "fz")
+
+
+def params_from_config(c: CFDConfig) -> dict:
+    """The per-simulation scalar struct for ``c`` (f32, like the fields).
+
+    Both the single-run path (``make_step``) and the simulation farm thread
+    these through the step, so a farm slot is bit-identical to a serial run
+    of the same configuration.
+    """
+    fx, fy, fz = c.forcing
+    vals = dict(nu=c.nu, dt=c.dt, lid_velocity=c.lid_velocity,
+                fx=fx, fy=fy, fz=fz)
+    return {k: jnp.float32(vals[k]) for k in PARAM_KEYS}
 
 
 class NavierStokes3D:
@@ -85,18 +106,18 @@ class NavierStokes3D:
         self._build_bcs()
 
     # ------------------------------------------------------------------ BCs
-    def _build_bcs(self):
+    def _bcs_for(self, lid_velocity) -> dict:
+        """BC rule table; ``lid_velocity`` may be a traced per-slot scalar."""
         c = self.config
         if c.case == "taylor_green":
             # fully periodic: no BC rules needed anywhere
-            self.bc = {f: ((None,) * 3, (None,) * 3) for f in self.FIELDS}
-            return
+            return {f: ((None,) * 3, (None,) * 3) for f in self.FIELDS}
         noslip = bc_moving_wall(0.0)
-        lid = bc_moving_wall(c.lid_velocity)
+        lid = bc_moving_wall(lid_velocity)
         zero = bc_dirichlet(0.0)
         neum = bc_neumann()
         # (bc_lo per axis, bc_hi per axis); z is periodic via Domain.periodic
-        self.bc = {
+        return {
             # vx: normal to x walls (ghost faces 0), tangential in y (lid at hi)
             "vx": ((zero, noslip, None), (zero, lid, None)),
             # vy: tangential in x, normal to y walls
@@ -107,8 +128,12 @@ class NavierStokes3D:
             "p": ((neum, neum, None), (neum, neum, None)),
         }
 
-    def _specs(self, field: str) -> tuple[AxisSpec, AxisSpec, AxisSpec]:
-        bc_lo, bc_hi = self.bc[field]
+    def _build_bcs(self):
+        self.bc = self._bcs_for(self.config.lid_velocity)
+
+    def _specs(self, field: str, bc: dict | None = None
+               ) -> tuple[AxisSpec, AxisSpec, AxisSpec]:
+        bc_lo, bc_hi = (bc or self.bc)[field]
         return self.driver.axis_specs(bc_lo=bc_lo, bc_hi=bc_hi)
 
     # --------------------------------------------------------------- fields
@@ -141,22 +166,39 @@ class NavierStokes3D:
 
     # ----------------------------------------------------------------- step
     def _global_mean(self, x):
-        m = jnp.mean(x)
+        # sequential per-axis sums, innermost first: the reduction order is
+        # then identical with and without a leading slot axis (vmap), which
+        # keeps farm slots bit-identical to serial runs
+        m = x
+        for _ in range(3):
+            m = m.sum(axis=-1)
+        m = m / np.prod(np.asarray(x.shape[-3:], np.float32))
         axes = tuple(self.domain.decomposition.values())
         if axes:
             m = lax.pmean(m, axes)
         return m
 
-    def _step_local(self, state: dict) -> dict:
-        """One dt, operating on local blocks (runs inside shard_map)."""
+    def _step_local(self, state: dict, params: dict | None = None) -> dict:
+        """One dt, operating on local blocks (runs inside shard_map).
+
+        ``params`` is the per-simulation scalar struct (see ``PARAM_KEYS``);
+        the farm vmaps this function over a slot axis with batched params,
+        the single-run path passes ``params_from_config`` constants.
+        """
         c = self.config
+        if params is None:
+            params = params_from_config(c)
         kw = dict(template=c.template or "JNP")
-        h, dt = c.h, c.dt
+        h = c.h
+        dt, nu = params["dt"], params["nu"]
+        bc = self._bcs_for(params["lid_velocity"])
+        specs = functools.partial(self._specs, bc=bc)
         vx, vy, vz, p = state["vx"], state["vy"], state["vz"], state["p"]
         mvx, mvy, mvz = state["mask_vx"], state["mask_vy"], state["mask_vz"]
 
         # -- 1. advection-diffusion (with comm/compute overlap if enabled)
-        vel_params = dict(dt=dt, h=h, nu=c.nu, fx=0.0, fy=0.0, fz=0.0)
+        vel_params = dict(dt=dt, h=h, nu=nu, fx=params["fx"],
+                          fy=params["fy"], fz=params["fz"])
 
         def upd_packed(padded):
             out = ops.update_velocity(padded[0], padded[1], padded[2],
@@ -169,7 +211,7 @@ class NavierStokes3D:
             # are computed from the exchanged pack.
             def pad_packed(pack):
                 return jnp.stack([
-                    exchange_pad(pack[i], (1, 1, 1), self._specs(f))
+                    exchange_pad(pack[i], (1, 1, 1), specs(f))
                     for i, f in enumerate(("vx", "vy", "vz"))
                 ])
 
@@ -179,19 +221,19 @@ class NavierStokes3D:
                 pad_fn=pad_packed)
             vx_s, vy_s, vz_s = out[0], out[1], out[2]
         else:
-            pads = [exchange_pad(v, (1, 1, 1), self._specs(f))
+            pads = [exchange_pad(v, (1, 1, 1), specs(f))
                     for f, v in (("vx", vx), ("vy", vy), ("vz", vz))]
             vx_s, vy_s, vz_s = ops.update_velocity(*pads, **vel_params, **kw)
 
         vx_s, vy_s, vz_s = vx_s * mvx, vy_s * mvy, vz_s * mvz
 
         # -- 2. divergence rhs
-        pads = [exchange_pad(v, ((1, 0),) * 3, self._specs(f))
+        pads = [exchange_pad(v, ((1, 0),) * 3, specs(f))
                 for f, v in (("vx", vx_s), ("vy", vy_s), ("vz", vz_s))]
         rhs = ops.divergence(*pads, h=h, **kw) / dt
 
         # -- 3. pressure Poisson (warm start from previous p)
-        p_specs = self._specs("p")
+        p_specs = specs("p")
         k = c.fused_sweeps
 
         def jacobi_body(_, pcur):
@@ -215,9 +257,16 @@ class NavierStokes3D:
         return dict(state, vx=vx_n, vy=vy_n, vz=vz_n, p=p_new)
 
     def make_step(self) -> Callable[[dict], dict]:
-        """Jitted global step (shard_map'd when a mesh decomposes the grid)."""
+        """Jitted global step (shard_map'd when a mesh decomposes the grid).
+
+        The config's scalars are threaded as f32 constants through the same
+        parameterized step the simulation farm vmaps, so a serial run is the
+        exact reference for a farm slot with the same parameters.
+        """
         example = self.init_state()
-        return self.driver.sharded_step_tree(self._step_local, example)
+        params = params_from_config(self.config)
+        jstep = self.driver.sharded_step_tree(self._step_local, example, params)
+        return lambda s: jstep(s, params)
 
     # ------------------------------------------------------------ analysis
     def divergence_of(self, state: dict) -> jnp.ndarray:

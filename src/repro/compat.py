@@ -1,0 +1,63 @@
+"""JAX version compatibility shims.
+
+The codebase is written against the current jax API surface; this module
+back-fills the handful of names that older releases (>= 0.4.3x) spell
+differently, so one tree runs on both:
+
+  * ``jax.shard_map``            — older jax has ``jax.experimental.shard_map``
+                                   with ``check_rep`` instead of ``check_vma``.
+  * ``jax.sharding.AxisType``    — absent on older jax; meshes are untyped.
+  * ``jax.make_mesh(axis_types=...)`` — older signature lacks the kwarg.
+
+``install()`` is idempotent and only patches what is missing, so on a
+current jax it is a no-op.  It runs from ``repro/__init__`` so every entry
+point (tests, launchers, subprocess snippets) sees a uniform API.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, **kw):
+            if check_vma is not None:
+                kw.setdefault("check_rep", check_vma)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # psum of a literal over a named axis constant-folds to the
+            # (static, python-int) axis size at trace time
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            del axis_types  # untyped meshes on this jax
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+
+install()

@@ -125,16 +125,26 @@ class GridDriver:
         )
         return jax.jit(mapped)
 
-    def sharded_step_tree(self, step_local: Callable, example_state) -> Callable:
-        """Like sharded_step but for a pytree state (dict of fields)."""
+    def sharded_step_tree(self, step_local: Callable, example_state,
+                          example_params=None) -> Callable:
+        """Like sharded_step but for a pytree state (dict of fields).
+
+        ``example_params``: optional pytree of replicated scalars passed as a
+        second *traced* argument (``step(state, params)``).  Keeping runtime
+        parameters out of the closure means the compiled code is identical to
+        the ensemble farm's vmapped step, where they are batched arguments.
+        """
         if self.mesh is None:
             return jax.jit(step_local)
         spec = self.domain.pspec()
         tree_spec = jax.tree_util.tree_map(lambda _: spec, example_state)
+        in_specs = (tree_spec,)
+        if example_params is not None:
+            in_specs += (jax.tree_util.tree_map(lambda _: P(), example_params),)
         mapped = jax.shard_map(
             step_local,
             mesh=self.mesh,
-            in_specs=(tree_spec,),
+            in_specs=in_specs,
             out_specs=tree_spec,
             check_vma=False,
         )

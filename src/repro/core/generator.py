@@ -30,9 +30,27 @@ from typing import Any, Callable, Mapping
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax._src.pallas.core import Element
+
+try:  # newer JAX: per-dim element indexing via Element block dims
+    from jax._src.pallas.core import Element as _Element
+except ImportError:  # older JAX: whole-spec Unblocked indexing mode
+    _Element = None
 
 from repro.core.descriptor import Intent, StencilDescriptor
+
+
+def element_block_spec(block_shape, index_map) -> pl.BlockSpec:
+    """BlockSpec whose ``index_map`` returns *element* offsets.
+
+    This is how the 3DBLOCK template expresses halo-expanded overlapping
+    windows (tile + stencil) staged into VMEM.  Newer JAX spells it with
+    ``Element`` block dims; older JAX with the ``Unblocked`` indexing mode.
+    Both take element offsets from the index map, so callers are agnostic.
+    """
+    if _Element is not None:
+        return pl.BlockSpec(tuple(_Element(b) for b in block_shape), index_map)
+    return pl.BlockSpec(tuple(block_shape), index_map,
+                        indexing_mode=pl.Unblocked())
 
 
 class FieldView:
@@ -117,14 +135,20 @@ class GeneratedKernel:
         return {k: out[k] for k in self.desc.outputs}
 
     # ---- 3DBLOCK (Pallas) template ----------------------------------------
-    def _apply_pallas(self, arrays: dict[str, jnp.ndarray], params: dict[str, Any]):
+    def _apply_pallas(self, arrays: dict[str, jnp.ndarray],
+                      params: dict[str, Any], *, batched: bool = False):
+        """The 3DBLOCK expansion; ``batched`` adds a leading slot axis to
+        the grid and every BlockSpec so one ``pallas_call`` advances all
+        resident simulations (the ensemble-executor form)."""
         desc = self.desc
         tx, ty, tz = desc.tile
         hl, hh = self._halo_lo, self._halo_hi
         first = arrays[desc.inputs[0]]
+        nslots = first.shape[0] if batched else None
+        space = first.shape[1:] if batched else first.shape
         interior = tuple(
-            s - (lo + hi) for s, lo, hi in zip(first.shape, hl, hh)
-        ) if desc.inputs[0] in desc.cached_inputs else first.shape
+            s - (lo + hi) for s, lo, hi in zip(space, hl, hh)
+        ) if desc.inputs[0] in desc.cached_inputs else space
         nx, ny, nz = interior
         if nx % tx or ny % ty or nz % tz:
             raise ValueError(
@@ -132,6 +156,18 @@ class GeneratedKernel:
                 f"use the autotuner or the JNP template"
             )
         grid = (nx // tx, ny // ty, nz // tz)
+        if batched:
+            grid = (nslots,) + grid
+
+        def slotted(block, index_map, element):
+            """Prepend the slot dim (block 1, offset = slot index)."""
+            if not batched:
+                return (element_block_spec(block, index_map) if element
+                        else pl.BlockSpec(block, index_map))
+            block = (1,) + block
+            index_map = lambda b, *g, _m=index_map: (b,) + _m(*g)
+            return (element_block_spec(block, index_map) if element
+                    else pl.BlockSpec(block, index_map))
 
         in_specs = []
         in_arrays = []
@@ -139,21 +175,20 @@ class GeneratedKernel:
             if name in desc.cached_inputs:
                 # halo-expanded overlapping window staged into VMEM — the
                 # shared-memory tile of the paper's 3DBLOCK template
-                block = (
-                    Element(tx + hl[0] + hh[0]),
-                    Element(ty + hl[1] + hh[1]),
-                    Element(tz + hl[2] + hh[2]),
-                )
-                index_map = lambda i, j, k: (i * tx, j * ty, k * tz)
+                spec = slotted(
+                    (tx + hl[0] + hh[0], ty + hl[1] + hh[1], tz + hl[2] + hh[2]),
+                    lambda i, j, k: (i * tx, j * ty, k * tz), element=True)
             else:
-                block = (tx, ty, tz)
-                index_map = lambda i, j, k: (i, j, k)
-            in_specs.append(pl.BlockSpec(block, index_map))
+                spec = slotted((tx, ty, tz), lambda i, j, k: (i, j, k),
+                               element=False)
+            in_specs.append(spec)
             in_arrays.append(arrays[name])
 
-        out_spec = pl.BlockSpec((tx, ty, tz), lambda i, j, k: (i, j, k))
+        out_spec = slotted((tx, ty, tz), lambda i, j, k: (i, j, k),
+                           element=False)
         out_names = desc.outputs
-        out_shapes = [jax.ShapeDtypeStruct(interior, arrays[n].dtype
+        out_shape = ((nslots,) + interior) if batched else interior
+        out_shapes = [jax.ShapeDtypeStruct(out_shape, arrays[n].dtype
                                            if n in arrays else first.dtype)
                       for n in out_names]
 
@@ -163,13 +198,16 @@ class GeneratedKernel:
             views = {}
             for name, ref in zip(desc.inputs, in_refs):
                 blk = ref[...]
+                if batched:
+                    blk = blk[0]  # drop the slot dim inside the block
                 cached = name in desc.cached_inputs
                 views[name] = FieldView(
                     blk, hl if cached else (0, 0, 0), hh if cached else (0, 0, 0)
                 )
             out = self.body(KernelContext(views, params))
             for name, ref in zip(out_names, out_refs):
-                ref[...] = out[name].astype(ref.dtype)
+                val = out[name][None] if batched else out[name]
+                ref[...] = val.astype(ref.dtype)
 
         results = pl.pallas_call(
             pallas_body,
@@ -182,6 +220,37 @@ class GeneratedKernel:
         if len(out_names) == 1:
             results = (results,) if not isinstance(results, (list, tuple)) else results
         return dict(zip(out_names, results))
+
+    # ---- batched (slot-axis) templates ------------------------------------
+    def _apply_jnp_batched(self, arrays, params, batched_params):
+        batched = {k: v for k, v in params.items() if k in batched_params}
+        static = {k: v for k, v in params.items() if k not in batched_params}
+
+        def fn(a, bp):
+            return self._apply_jnp(a, {**static, **bp})
+
+        return jax.vmap(fn, in_axes=(0, 0))(arrays, batched)
+
+    def apply_batched(self, arrays: dict[str, jnp.ndarray],
+                      batched_params: frozenset | tuple = (), **params):
+        """Apply the kernel over a leading slot (batch) axis of every array.
+
+        ``batched_params`` names runtime parameters that also carry the slot
+        axis (per-simulation scalars, e.g. viscosity); the rest are shared.
+        The JNP template vmaps the fused expansion; the 3DBLOCK template adds
+        the slot axis to its grid/BlockSpecs (shared scalars only — per-slot
+        parameters would need scalar prefetch, which the JNP path covers).
+        """
+        for p in self.desc.parameters:
+            if p not in params:
+                raise ValueError(f"missing runtime parameter {p!r}")
+        if self.template == "JNP":
+            return self._apply_jnp_batched(arrays, params,
+                                           frozenset(batched_params))
+        if batched_params:
+            raise NotImplementedError(
+                "per-slot parameters require the JNP template")
+        return self._apply_pallas(arrays, params, batched=True)
 
     def __call__(self, arrays: dict[str, jnp.ndarray], **params):
         for p in self.desc.parameters:

@@ -58,3 +58,22 @@ def rk4(rhs: RHS, y: T, t, dt) -> T:
 
 
 INTEGRATORS = {"euler": euler, "rk2": rk2, "rk3": rk3_ssp, "rk4": rk4}
+
+
+def batched(integrator: Callable) -> Callable:
+    """Vmap an integrator over a leading slot axis (the simulation farm).
+
+    ``y`` leaves, ``t`` and ``dt`` all carry the slot axis, so every
+    ensemble member advances with its own time and step size under one
+    compiled step; ``rhs`` sees per-slot (unbatched) state, exactly as in a
+    serial run — a farm slot therefore integrates identically to MoL alone.
+    """
+
+    def step(rhs: RHS, y: T, t, dt) -> T:
+        return jax.vmap(lambda yi, ti, di: integrator(rhs, yi, ti, di))(
+            y, t, dt)
+
+    return step
+
+
+BATCHED_INTEGRATORS = {k: batched(v) for k, v in INTEGRATORS.items()}

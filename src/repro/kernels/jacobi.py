@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax._src.pallas.core import Element
+
+from repro.core.generator import element_block_spec
 
 
 def _sweep(p, rhs, h2, omega):
@@ -69,8 +70,8 @@ def jacobi_fused(
     if any(n % t for n, t in zip(interior, (tx, ty, tz))):
         raise ValueError(f"interior {interior} not divisible by tile {(tx, ty, tz)}")
     grid = (interior[0] // tx, interior[1] // ty, interior[2] // tz)
-    halo_spec = pl.BlockSpec(
-        (Element(tx + 2 * k), Element(ty + 2 * k), Element(tz + 2 * k)),
+    halo_spec = element_block_spec(
+        (tx + 2 * k, ty + 2 * k, tz + 2 * k),
         lambda i, j, l: (i * tx, j * ty, l * tz),
     )
     out_spec = pl.BlockSpec((tx, ty, tz), lambda i, j, l: (i, j, l))

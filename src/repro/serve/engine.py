@@ -15,7 +15,6 @@ bucketed prompt (bucketing avoids a compile per prompt length).
 from __future__ import annotations
 
 import dataclasses
-import queue
 from typing import Callable
 
 import jax
@@ -24,6 +23,7 @@ import numpy as np
 
 from repro.models import model
 from repro.models.config import LOCAL, ModelConfig, ShardCfg
+from repro.serve.slots import SlotTable
 
 
 @dataclasses.dataclass
@@ -53,8 +53,7 @@ class ServingEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.shard = shard
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.active: list[Request | None] = [None] * slots
+        self.table = SlotTable(slots)
         self.finished: list[Request] = []
         self.lengths = np.zeros((slots,), np.int32)   # filled tokens per slot
         self.budgets = np.zeros((slots,), np.int32)
@@ -77,7 +76,11 @@ class ServingEngine:
 
     # -- request intake ---------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.put(req)
+        self.table.submit(req)
+
+    @property
+    def active(self) -> list[Request | None]:
+        return [self.table.get(s) for s in range(self.slots)]
 
     def _prefill_fn(self, plen: int):
         if plen not in self._prefill_cache:
@@ -90,13 +93,11 @@ class ServingEngine:
         return self._prefill_cache[plen]
 
     def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] is not None:
-                continue
-            try:
-                req = self.queue.get_nowait()
-            except queue.Empty:
+        while True:
+            admitted = self.table.admit_next()
+            if admitted is None:
                 return
+            s, req = admitted
             plen = len(req.prompt)
             b = _bucket(plen)
             toks = np.full((1, b), 0, np.int32)
@@ -113,7 +114,6 @@ class ServingEngine:
                 lambda full, one, ax: jax.lax.dynamic_update_index_in_dim(
                     full, jnp.take(one, 0, axis=ax), s, ax),
                 self.caches, one_cache, self._batch_axes)
-            self.active[s] = req
             # re-decode the last real prompt token: its KV rewrite at
             # position plen-1 is idempotent and yields the first new token
             # without a per-length prefill compile (bucketed pads beyond
@@ -125,16 +125,14 @@ class ServingEngine:
     # -- one engine step -------------------------------------------------------
     def step(self):
         self._admit()
-        if all(r is None for r in self.active):
+        if self.table.n_active == 0:
             return False
         cache_len = jnp.asarray(self.lengths)        # (slots,) per-slot fill
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.last_token), self.caches, cache_len)
         toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         self.steps += 1
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
+        for s, req in list(self.table.occupied()):
             t = int(toks[s])
             req.output.append(t)
             self.last_token[s, 0] = t
@@ -145,14 +143,14 @@ class ServingEngine:
                     or self.lengths[s] >= self.max_seq - 1):
                 req.done = True
                 self.finished.append(req)
-                self.active[s] = None
+                self.table.release(s)
                 self.lengths[s] = 0
         return True
 
     def run_until_drained(self, max_steps: int = 10_000):
         while self.steps < max_steps:
             if not self.step():
-                if self.queue.empty():
+                if self.table.idle:
                     break
         return self.finished
 

@@ -1,0 +1,84 @@
+"""Fixed-slot occupancy table + FIFO admission queue.
+
+The continuous-batching pattern shared by the LM serving engine
+(:mod:`repro.serve.engine`) and the CFD simulation farm
+(:mod:`repro.sim.farm`): a fixed device batch of ``n_slots`` resident
+items, a host-side FIFO of waiting work, and slot reclamation — whenever a
+slot frees, the next queued item is admitted into it and the whole batch
+keeps stepping.  The table owns only host-side bookkeeping; callers own the
+device-side state keyed by slot index.
+"""
+from __future__ import annotations
+
+import queue
+from typing import Any, Iterator
+
+
+class SlotTable:
+    """Host bookkeeping for a fixed pool of device slots."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._entries: list[Any | None] = [None] * n_slots
+        self._queue: "queue.Queue[Any]" = queue.Queue()
+
+    # -- intake ---------------------------------------------------------------
+    def submit(self, item: Any) -> None:
+        """Queue ``item`` for admission when a slot frees."""
+        self._queue.put(item)
+
+    # -- admission ------------------------------------------------------------
+    def admit_next(self) -> tuple[int, Any] | None:
+        """Pop the next queued item into the first free slot.
+
+        Returns ``(slot, item)``, or ``None`` when there is no free slot or
+        nothing is queued.  Call repeatedly to fill every free slot.
+        """
+        slot = next(self.free_slots(), None)
+        if slot is None:
+            return None
+        try:
+            item = self._queue.get_nowait()
+        except queue.Empty:
+            return None
+        self._entries[slot] = item
+        return slot, item
+
+    # -- occupancy ------------------------------------------------------------
+    def get(self, slot: int) -> Any | None:
+        return self._entries[slot]
+
+    def replace(self, slot: int, item: Any) -> None:
+        """Swap the occupant of ``slot`` (e.g. queued request -> live entry)."""
+        if self._entries[slot] is None:
+            raise ValueError(f"slot {slot} is free; admit into it instead")
+        self._entries[slot] = item
+
+    def release(self, slot: int) -> Any:
+        """Free ``slot``; returns the item that occupied it."""
+        item = self._entries[slot]
+        if item is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._entries[slot] = None
+        return item
+
+    def free_slots(self) -> Iterator[int]:
+        return (s for s, e in enumerate(self._entries) if e is None)
+
+    def occupied(self) -> Iterator[tuple[int, Any]]:
+        return ((s, e) for s, e in enumerate(self._entries) if e is not None)
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for e in self._entries if e is not None)
+
+    @property
+    def n_queued(self) -> int:
+        return self._queue.qsize()
+
+    @property
+    def idle(self) -> bool:
+        """Nothing resident and nothing waiting."""
+        return self.n_active == 0 and self._queue.empty()

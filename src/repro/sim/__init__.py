@@ -1,0 +1,24 @@
+"""Simulation farm: continuous-batching ensemble runtime for CFD workloads.
+
+The serving pattern of :mod:`repro.serve.engine` (fixed device slots +
+continuous batching) applied to stencil simulations: many independent
+parameter variants of one case resident on a slot axis, advanced by a single
+jitted vmapped step, with host-side admission/reclamation and a compile
+cache so new work of an already-seen shape never recompiles.
+
+    ensemble.py   the device layer — slot-stacked state, one step for all
+    farm.py       the scheduler — queue, slots, termination, compile cache
+    service.py    the front-end — submit/poll/result + evict/readmit
+"""
+from repro.sim.ensemble import EnsembleExecutor, stack_trees
+from repro.sim.farm import (
+    SimRequest, SimResult, SimulationFarm, compile_cache_stats,
+    reset_compile_cache,
+)
+from repro.sim.service import SimulationService
+
+__all__ = [
+    "EnsembleExecutor", "SimRequest", "SimResult", "SimulationFarm",
+    "SimulationService", "compile_cache_stats", "reset_compile_cache",
+    "stack_trees",
+]

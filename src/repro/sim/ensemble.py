@@ -1,0 +1,124 @@
+"""Ensemble executor: one jitted step advances every resident simulation.
+
+The device half of the simulation farm.  All ensemble members share one
+compiled executable: the solver's parameterized local step is vmapped over a
+leading *slot* axis of both the field state and the per-simulation scalar
+struct (``ns3d.PARAM_KEYS`` — viscosity, dt, lid velocity, forcing), exactly
+as the LM engine decodes its whole slot batch each step.  Because the serial
+path (``NavierStokes3D.make_step``) threads the same f32 scalars through the
+same traced step, a farm slot reproduces a serial run bit-for-bit — and so
+does *chunked* stepping, a ``fori_loop`` of that step with a dynamic trip
+count, which is how the farm amortizes host dispatch when no slot is due to
+finish (the analogue of multi-token speculation windows in LM serving).
+
+The descriptor-generated kernels batch the same way one level down:
+``GeneratedKernel.apply_batched`` vmaps the JNP template and gives the
+3DBLOCK Pallas template a leading batch axis in its grid/BlockSpecs; the
+solver-level vmap used here subsumes both for the full CFD step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.cfd.ns3d import PARAM_KEYS, CFDConfig, NavierStokes3D
+
+
+def stack_trees(trees):
+    """Stack a list of identically-structured pytrees on a new slot axis 0."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def make_ensemble_step(solver: NavierStokes3D):
+    """The compiled ensemble executable for ``solver``'s configuration:
+    ``run_k(state, params, k)`` advances the whole slot batch ``k`` steps
+    (``k`` is a traced scalar — one compile covers every chunk size)."""
+    vstep = jax.vmap(solver._step_local)
+
+    def run_k(state, params, k):
+        return lax.fori_loop(0, k, lambda _, s: vstep(s, params), state)
+
+    return jax.jit(run_k)
+
+
+class EnsembleExecutor:
+    """Slot-stacked state + the single jitted step that advances it.
+
+    Owns no scheduling policy: slots are written/read by index, every step
+    advances all of them (idle slots compute garbage that the farm masks on
+    the host — the standard padding-batch trade from LM serving).
+    """
+
+    def __init__(self, config: CFDConfig, n_slots: int,
+                 solver: NavierStokes3D | None = None, run_k=None):
+        if config.decomposition:
+            raise NotImplementedError(
+                "the ensemble executor batches over slots on one device "
+                "mesh; per-slot grid decomposition is not supported")
+        self.config = config
+        self.n_slots = n_slots
+        self.solver = solver if solver is not None else NavierStokes3D(config)
+        self._run_k = run_k if run_k is not None else make_ensemble_step(
+            self.solver)
+        fresh = self.solver.init_state()
+        self._fresh = fresh            # per-slot initial state (unbatched)
+        self.state = stack_trees([fresh] * n_slots)
+        # per-slot scalars: host-authoritative (like the engine's slot
+        # lengths), mirrored to a device struct only when admission dirties
+        # them — steps between admissions ship nothing host->device
+        self.params = {k: np.zeros((n_slots,), np.float32) for k in PARAM_KEYS}
+        self.params["dt"][:] = np.float32(config.dt)   # idle slots stay finite
+        self._params_dev = None
+        self._ke = jax.jit(jax.vmap(
+            lambda st: 0.5 * sum(jnp.mean(st[f] ** 2)
+                                 for f in ("vx", "vy", "vz"))))
+
+    # -- slot I/O -------------------------------------------------------------
+    def write_slot(self, slot: int, params: dict, state: dict | None = None):
+        """Admit a simulation: install its parameters and (re)set its fields.
+
+        ``state=None`` writes the case's fresh initial state (new run);
+        passing a host state dict readmits an evicted simulation.
+        """
+        src = self._fresh if state is None else {
+            k: jnp.asarray(v) for k, v in state.items()}
+        self.state = jax.tree_util.tree_map(
+            lambda full, one: lax.dynamic_update_index_in_dim(
+                full, one.astype(full.dtype), slot, 0),
+            self.state, dict(src))
+        for k in PARAM_KEYS:
+            self.params[k][slot] = np.float32(params[k])
+        self._params_dev = None
+
+    def read_slot(self, slot: int) -> dict:
+        """Host copy of one simulation's fields."""
+        return {k: np.asarray(v[slot]) for k, v in self.state.items()}
+
+    def clear_slot(self, slot: int):
+        """Park a freed slot on benign parameters (finite garbage compute)."""
+        for k in PARAM_KEYS:
+            self.params[k][slot] = np.float32(
+                self.config.dt if k == "dt" else 0.0)
+        self._params_dev = None
+
+    # -- stepping -------------------------------------------------------------
+    def _device_params(self) -> dict:
+        if self._params_dev is None:
+            self._params_dev = {k: jnp.asarray(v)
+                                for k, v in self.params.items()}
+        return self._params_dev
+
+    def step_many(self, k: int):
+        """Advance the whole slot batch ``k`` device steps in one dispatch."""
+        self.state = self._run_k(self.state, self._device_params(),
+                                 jnp.int32(k))
+
+    def step(self):
+        """One device step for the whole slot batch."""
+        self.step_many(1)
+
+    def kinetic_energy(self) -> np.ndarray:
+        """(n_slots,) per-slot kinetic energy (steady-state detection)."""
+        return np.asarray(self._ke(self.state))

@@ -1,0 +1,282 @@
+"""The simulation farm: continuous batching of CFD runs over fixed slots.
+
+Scheduling policy for the :class:`~repro.sim.ensemble.EnsembleExecutor`:
+requests queue up host-side; whenever a slot frees (target step count hit or
+steady state detected), the next request is admitted into it and the whole
+batch keeps stepping — the vLLM pattern with CFD steps in place of token
+decodes.  Admission writes the case's initial fields (or an evicted
+simulation's saved fields) into the slot and installs its per-simulation
+scalars; nothing ever recompiles, because the compiled ensemble step depends
+only on the *static* configuration (case, grid shape, tile/template, solver
+structure, slot count).
+
+Those compiled steps live in a process-wide cache keyed by that static
+signature, so a second farm — or a farm restarted after drain — of an
+already-seen shape reuses the executable (hit/miss counters exposed via
+:func:`compile_cache_stats` and asserted by the test suite).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.cfd.ns3d import CFDConfig, NavierStokes3D, params_from_config
+from repro.serve.slots import SlotTable
+from repro.sim.ensemble import EnsembleExecutor, make_ensemble_step
+
+
+# -- compile cache -----------------------------------------------------------
+_STEP_CACHE: dict[tuple, tuple[NavierStokes3D, Any]] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def static_key(config: CFDConfig, n_slots: int) -> tuple:
+    """The compile signature: everything that selects the executable.
+
+    Per-simulation physics (nu, dt, lid velocity, forcing) is deliberately
+    absent — it is threaded through the step as traced scalars, so admitting
+    a new parameter variant of a seen shape never recompiles.
+    """
+    return (
+        config.case, config.shape, config.extent, config.jacobi_iters,
+        config.jacobi_omega, config.fused_sweeps, config.template,
+        config.overlap, config.decomposition, n_slots,
+    )
+
+
+def compiled_ensemble_step(config: CFDConfig, n_slots: int):
+    """(solver, jitted chunked ensemble step) for the static signature."""
+    key = static_key(config, n_slots)
+    hit = _STEP_CACHE.get(key)
+    if hit is not None:
+        _CACHE_STATS["hits"] += 1
+        return hit
+    _CACHE_STATS["misses"] += 1
+    solver = NavierStokes3D(config)
+    _STEP_CACHE[key] = (solver, make_ensemble_step(solver))
+    return _STEP_CACHE[key]
+
+
+def compile_cache_stats() -> dict:
+    return dict(_CACHE_STATS, entries=len(_STEP_CACHE))
+
+
+def reset_compile_cache():
+    _STEP_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+# -- requests / results ------------------------------------------------------
+@dataclasses.dataclass
+class SimRequest:
+    """One simulation: a full per-run config + how long to run it.
+
+    The config's static part must match the farm's; its scalar part (nu, dt,
+    lid velocity, forcing) is what makes this run *this* run.  ``steps`` is
+    the target device-step count; ``steady_tol`` optionally terminates early
+    once the relative kinetic-energy drift per check interval falls below it.
+    ``init_state``/``step0`` readmit an evicted simulation mid-flight.
+    """
+
+    config: CFDConfig
+    steps: int
+    tag: str = ""
+    steady_tol: float | None = None
+    init_state: dict | None = None
+    step0: int = 0
+    sid: int | None = None   # assigned by the farm
+
+
+@dataclasses.dataclass
+class SimResult:
+    sid: int
+    tag: str
+    steps_done: int
+    terminated: str          # "steps" | "steady"
+    state: dict              # host arrays: vx, vy, vz, p (+ masks)
+    config: CFDConfig
+
+
+class _SlotEntry:
+    """Host bookkeeping for one resident simulation."""
+
+    __slots__ = ("req", "steps_done", "ke_prev")
+
+    def __init__(self, req: SimRequest):
+        self.req = req
+        self.steps_done = req.step0
+        self.ke_prev: float | None = None
+
+
+class SimulationFarm:
+    """Queue + slots + termination around one compiled ensemble step."""
+
+    def __init__(self, base_config: CFDConfig, n_slots: int = 8,
+                 check_steady_every: int = 16):
+        self.base_config = base_config
+        self.n_slots = n_slots
+        self.check_steady_every = check_steady_every
+        solver, run_k = compiled_ensemble_step(base_config, n_slots)
+        self.exec = EnsembleExecutor(base_config, n_slots,
+                                     solver=solver, run_k=run_k)
+        self.table = SlotTable(n_slots)
+        self.results: dict[int, SimResult] = {}
+        self.device_steps = 0
+        self._next_sid = 0
+        self._live: set[int] = set()   # queued or resident sids
+
+    # -- intake ---------------------------------------------------------------
+    def submit(self, req: SimRequest) -> int:
+        """Queue a simulation; returns its sid (poll/result handle)."""
+        if static_key(req.config, self.n_slots) != static_key(
+                self.base_config, self.n_slots):
+            raise ValueError(
+                "request's static config does not match this farm: "
+                f"{static_key(req.config, self.n_slots)} vs "
+                f"{static_key(self.base_config, self.n_slots)}")
+        if req.steps < 0:
+            raise ValueError(f"steps must be >= 0, got {req.steps}")
+        if req.sid is None:
+            req.sid = self._next_sid
+            self._next_sid += 1
+        elif req.sid in self._live or req.sid in self.results:
+            # a request object is a one-shot ticket: resubmitting it while
+            # its sid is queued/resident/finished would silently alias two
+            # simulations onto one handle
+            raise ValueError(f"sid {req.sid} is already submitted")
+        else:
+            # caller-set sid (readmission): reserve it so auto-assignment
+            # can never alias a fresh request onto the same handle
+            self._next_sid = max(self._next_sid, req.sid + 1)
+        self._live.add(req.sid)
+        self.table.submit(req)
+        return req.sid
+
+    def _admit(self):
+        while True:
+            admitted = self.table.admit_next()
+            if admitted is None:
+                return
+            slot, req = admitted
+            # replace the queued request with live bookkeeping
+            entry = _SlotEntry(req)
+            self.table.replace(slot, entry)
+            self.exec.write_slot(slot, params_from_config(req.config),
+                                 state=req.init_state)
+            if entry.steps_done >= req.steps:
+                # already at (or past) its target: harvest without stepping,
+                # so a steps=0 request never advances the batch
+                self._finish(slot, entry, "steps")
+
+    # -- stepping -------------------------------------------------------------
+    def _chunk_size(self, max_chunk: int | None) -> int:
+        """Device steps until the next host decision point.
+
+        The batch can run on-device (one dispatch, ``fori_loop``) until the
+        earliest of: a slot hitting its target step count (slot reclamation
+        + admission happen then), the next steady-state check boundary, or
+        the caller's budget.  Chunking is numerics-neutral — tested bitwise
+        against single-stepping.
+        """
+        chunk = min(e.req.steps - e.steps_done
+                    for _, e in self.table.occupied())
+        if any(e.req.steady_tol is not None
+               for _, e in self.table.occupied()):
+            boundary = self.check_steady_every - (
+                self.device_steps % self.check_steady_every)
+            chunk = min(chunk, boundary)
+        if max_chunk is not None:
+            chunk = min(chunk, max_chunk)
+        return max(chunk, 1)
+
+    def step(self, max_chunk: int | None = None) -> int:
+        """Admit waiting work, advance the batch one chunk, harvest
+        finishers.  Returns the number of device steps taken (0 when the
+        farm is empty)."""
+        self._admit()
+        if self.table.n_active == 0:
+            return 0
+        chunk = self._chunk_size(max_chunk)
+        self.exec.step_many(chunk)
+        self.device_steps += chunk
+        for slot, entry in list(self.table.occupied()):
+            entry.steps_done += chunk
+            if entry.steps_done >= entry.req.steps:
+                self._finish(slot, entry, "steps")
+        self._check_steady()
+        return chunk
+
+    def _check_steady(self):
+        if self.device_steps % self.check_steady_every:
+            return
+        watched = [(s, e) for s, e in self.table.occupied()
+                   if e.req.steady_tol is not None]
+        if not watched:
+            return
+        ke = self.exec.kinetic_energy()
+        for slot, entry in watched:
+            k = float(ke[slot])
+            prev = entry.ke_prev
+            entry.ke_prev = k
+            if prev is not None and abs(k - prev) <= entry.req.steady_tol * max(
+                    abs(k), 1e-12):
+                self._finish(slot, entry, "steady")
+
+    def _finish(self, slot: int, entry: _SlotEntry, reason: str):
+        req = entry.req
+        self.results[req.sid] = SimResult(
+            sid=req.sid, tag=req.tag, steps_done=entry.steps_done,
+            terminated=reason, state=self.exec.read_slot(slot),
+            config=req.config)
+        self._live.discard(req.sid)
+        self.table.release(slot)
+        self.exec.clear_slot(slot)
+
+    def run(self, max_device_steps: int, until=None) -> int:
+        """Step until the budget, the farm drains, or ``until()`` is true.
+
+        ``max_device_steps`` budgets *this call*, not the farm's lifetime.
+        Returns the device steps taken.
+        """
+        taken = 0
+        while taken < max_device_steps and not (until is not None and until()):
+            t = self.step(max_chunk=max_device_steps - taken)
+            if not t:
+                break
+            taken += t
+        return taken
+
+    def run_until_drained(self, max_device_steps: int = 100_000
+                          ) -> dict[int, SimResult]:
+        """Step until queue and slots are empty; returns all results."""
+        self.run(max_device_steps)
+        return self.results
+
+    # -- eviction (service hook) ---------------------------------------------
+    def evict(self, sid: int) -> tuple[SimRequest, dict, int] | None:
+        """Pull a *running* simulation off the device mid-flight.
+
+        Returns ``(request, host_state, steps_done)`` and frees the slot;
+        None if ``sid`` is not currently resident.  Readmission goes through
+        ``submit`` with ``init_state``/``step0`` set (see the service).
+        """
+        for slot, entry in self.table.occupied():
+            if entry.req.sid == sid:
+                state = self.exec.read_slot(slot)
+                self._live.discard(sid)
+                self.table.release(slot)
+                self.exec.clear_slot(slot)
+                return entry.req, state, entry.steps_done
+        return None
+
+    def known(self, sid: int) -> bool:
+        """Has this sid ever been issued by the farm?"""
+        return 0 <= sid < self._next_sid
+
+    def steps_done(self, sid: int) -> int | None:
+        for _, entry in self.table.occupied():
+            if entry.req.sid == sid:
+                return entry.steps_done
+        return None

@@ -1,0 +1,126 @@
+"""Service front-end for the simulation farm: submit / poll / result.
+
+The multi-tenant surface: callers hold a ``sid`` ticket, the service drives
+the farm and answers status queries.  Long-running simulations can be
+*evicted* — their slot state is pulled to host memory (and spilled to disk
+through :class:`repro.ckpt.checkpointer.Checkpointer` when a directory is
+configured, reusing its atomic-rename layout) so the slot serves other
+traffic — and later *readmitted* to continue exactly where they stopped:
+the saved fields re-enter a slot bit-identically, so an evicted+readmitted
+run equals an uninterrupted one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.cfd.ns3d import CFDConfig
+from repro.ckpt.checkpointer import Checkpointer
+from repro.sim.farm import SimRequest, SimResult, SimulationFarm
+
+
+@dataclasses.dataclass
+class _Evicted:
+    req: SimRequest
+    steps_done: int
+    state: dict | None       # host state, or None when spilled to disk
+
+
+class SimulationService:
+    """submit/poll/result over a SimulationFarm, with eviction hooks."""
+
+    def __init__(self, base_config: CFDConfig, n_slots: int = 8,
+                 ckpt_dir: str | None = None, check_steady_every: int = 16):
+        self.farm = SimulationFarm(base_config, n_slots,
+                                   check_steady_every=check_steady_every)
+        self._evicted: dict[int, _Evicted] = {}
+        self._requeued_progress: dict[int, int] = {}  # readmitted, waiting
+        self._ckpt = Checkpointer(ckpt_dir, keep_last=0) if ckpt_dir else None
+
+    # -- intake ---------------------------------------------------------------
+    def submit(self, req: SimRequest) -> int:
+        return self.farm.submit(req)
+
+    # -- status ---------------------------------------------------------------
+    def poll(self, sid: int) -> dict:
+        """{"status": queued|running|evicted|done, "steps_done": int}."""
+        if sid in self.farm.results:
+            return {"status": "done",
+                    "steps_done": self.farm.results[sid].steps_done}
+        if sid in self._evicted:
+            return {"status": "evicted",
+                    "steps_done": self._evicted[sid].steps_done}
+        running = self.farm.steps_done(sid)
+        if running is not None:
+            self._requeued_progress.pop(sid, None)
+            return {"status": "running", "steps_done": running}
+        if self.farm.known(sid):
+            # a readmitted sim waiting for a slot keeps its saved progress
+            return {"status": "queued",
+                    "steps_done": self._requeued_progress.get(sid, 0)}
+        raise KeyError(f"unknown simulation id {sid}")
+
+    # -- driving --------------------------------------------------------------
+    def run(self, device_steps: int) -> int:
+        """Advance the farm up to ``device_steps``; returns steps taken."""
+        return self.farm.run(device_steps)
+
+    def result(self, sid: int, block: bool = True,
+               max_device_steps: int = 100_000) -> SimResult:
+        """The finished simulation; drives the farm to completion if needed."""
+        if block and sid not in self.farm.results:
+            if sid in self._evicted:
+                self.readmit(sid)
+            self.farm.run(max_device_steps,
+                          until=lambda: sid in self.farm.results)
+        if sid not in self.farm.results:
+            raise KeyError(f"simulation {sid} has not finished "
+                           f"(status: {self.poll(sid)['status']})")
+        return self.farm.results[sid]
+
+    # -- eviction / readmission ------------------------------------------------
+    def evict(self, sid: int) -> bool:
+        """Move a resident simulation's state off-device, freeing its slot.
+
+        With a checkpoint directory configured the fields spill to disk via
+        the atomic checkpointer (sid doubles as the step id); otherwise they
+        stay in host RAM.
+        """
+        pulled = self.farm.evict(sid)
+        if pulled is None:
+            return False
+        req, state, steps_done = pulled
+        if self._ckpt is not None:
+            self._ckpt.save(sid, state, blocking=True)
+            state = None
+        self._evicted[sid] = _Evicted(req=req, steps_done=steps_done,
+                                      state=state)
+        return True
+
+    def readmit(self, sid: int) -> bool:
+        """Re-queue an evicted simulation; it resumes at its exact step."""
+        ev = self._evicted.get(sid)
+        if ev is None:
+            return False
+        state = ev.state
+        if state is None:
+            template = {k: np.zeros(v.shape, v.dtype)
+                        for k, v in self.farm.exec.read_slot(0).items()}
+            state = self._ckpt.restore(sid, template)
+            state = {k: np.asarray(v) for k, v in state.items()}
+        req = dataclasses.replace(ev.req, init_state=state,
+                                  step0=ev.steps_done, sid=sid)
+        self.farm.submit(req)
+        # only now is the sim safely requeued — a failed restore above must
+        # leave the eviction record intact for another attempt
+        del self._evicted[sid]
+        self._requeued_progress[sid] = ev.steps_done
+        return True
+
+    def drain(self, max_device_steps: int = 100_000) -> dict[int, SimResult]:
+        """Readmit everything evicted, then run the farm dry."""
+        for sid in list(self._evicted):
+            self.readmit(sid)
+        return self.farm.run_until_drained(max_device_steps)

@@ -1,0 +1,79 @@
+"""Minimal stand-in for ``hypothesis`` on bare interpreters.
+
+The tier-1 suite must collect and run without any dev dependencies beyond
+pytest + jax.  When the real ``hypothesis`` is installed it is always
+preferred (see conftest.py); this fallback implements just the subset the
+suite uses — ``given``/``settings`` and the ``sampled_from``/``integers``/
+``booleans``/``floats`` strategies — by drawing a fixed number of
+deterministic pseudo-random examples, so the property tests still exercise
+their shape/dtype sweeps instead of being skipped wholesale.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # rng -> value
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def integers(min_value=0, max_value=2 ** 30):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(
+    sampled_from=sampled_from,
+    integers=integers,
+    booleans=booleans,
+    floats=floats,
+)
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", DEFAULT_EXAMPLES))
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest introspects the signature for fixtures: hide the drawn
+        # parameters (and the __wrapped__ chain that would re-expose them)
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco

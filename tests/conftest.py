@@ -4,4 +4,17 @@
 import os
 import sys
 
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))  # bare `pytest` without PYTHONPATH
+
+# The suite must collect on a bare interpreter (pytest + jax only).  Prefer
+# the real hypothesis; otherwise install the deterministic fallback so the
+# property tests still run their sweeps instead of crashing at import.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from tests import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies

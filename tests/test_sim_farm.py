@@ -1,0 +1,268 @@
+"""Simulation farm: batched ensembles must reproduce serial runs exactly,
+slots must recycle through queued work, and the compile cache must hand out
+one executable per static signature."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.cfd import cavity, taylor_green
+from repro.cfd.ns3d import NavierStokes3D, params_from_config
+from repro.core import generate, mol
+from repro.kernels import stencil3d
+from repro.sim import (
+    EnsembleExecutor, SimulationFarm, SimulationService,
+    compile_cache_stats, reset_compile_cache, stack_trees,
+)
+
+N = 16
+KW = dict(jacobi_iters=20)
+
+
+def serial_reference(re: float, steps: int):
+    """The pre-farm workflow: one solver, one GridDriver-jitted step."""
+    solver = NavierStokes3D(cavity.config(N, re=re, **KW))
+    state = solver.init_state()
+    step = solver.make_step()
+    for _ in range(steps):
+        state = step(state)
+    return jax.device_get(state)
+
+
+FIELDS = ("vx", "vy", "vz", "p")
+
+
+class TestFarmMatchesSerial:
+    # 8 heterogeneous sims through 4 slots: mixed Reynolds numbers AND mixed
+    # step counts, so slots reclaim mid-flight and admissions interleave.
+    RES = (50.0, 80.0, 100.0, 150.0, 200.0, 250.0, 300.0, 400.0)
+    STEPS = (30, 45, 25, 60, 35, 50, 40, 55)
+
+    @pytest.fixture(scope="class")
+    def farm_results(self):
+        farm = SimulationFarm(cavity.config(N, **KW), n_slots=4)
+        sids = {}
+        for re, steps in zip(self.RES, self.STEPS):
+            sid = farm.submit(cavity.sim_request(N, re=re, steps=steps, **KW))
+            sids[sid] = (re, steps)
+        results = farm.run_until_drained()
+        return farm, sids, results
+
+    def test_all_complete(self, farm_results):
+        farm, sids, results = farm_results
+        assert set(results) == set(sids)
+        for sid, (_, steps) in sids.items():
+            assert results[sid].steps_done == steps
+            assert results[sid].terminated == "steps"
+
+    def test_bitwise_identical_to_serial(self, farm_results):
+        _, sids, results = farm_results
+        for sid, (re, steps) in sids.items():
+            ref = serial_reference(re, steps)
+            for f in FIELDS:
+                np.testing.assert_array_equal(
+                    ref[f], results[sid].state[f],
+                    err_msg=f"sid={sid} re={re} field={f}")
+
+    def test_slot_reclamation_batches_work(self, farm_results):
+        farm, sids, _ = farm_results
+        # 4 slots served 8 sims: continuous batching must beat one-at-a-time
+        # (sum of steps) and a freed slot must have admitted queued work
+        # (device steps strictly less than two sequential half-batches of
+        # the worst case, and at least the longest single sim).
+        total = sum(s for _, s in sids.values())
+        assert farm.device_steps < total
+        assert farm.device_steps >= max(s for _, s in sids.values())
+
+
+class TestCompileCache:
+    def test_one_compile_per_static_signature(self):
+        reset_compile_cache()
+        base = cavity.config(N, **KW)
+        farm1 = SimulationFarm(base, n_slots=4)
+        for re in (70.0, 120.0, 180.0, 220.0, 260.0):
+            farm1.submit(cavity.sim_request(N, re=re, steps=5, **KW))
+        farm1.run_until_drained()
+        assert compile_cache_stats()["misses"] == 1
+        # a second farm of the same shape reuses the compiled step
+        farm2 = SimulationFarm(base, n_slots=4)
+        farm2.submit(cavity.sim_request(N, re=90.0, steps=5, **KW))
+        farm2.run_until_drained()
+        stats = compile_cache_stats()
+        assert stats["misses"] == 1 and stats["hits"] == 1
+        # a different slot count is a different executable
+        SimulationFarm(base, n_slots=2)
+        assert compile_cache_stats()["misses"] == 2
+
+    def test_static_mismatch_rejected(self):
+        farm = SimulationFarm(cavity.config(N, **KW), n_slots=2)
+        with pytest.raises(ValueError, match="static config"):
+            farm.submit(cavity.sim_request(N, re=100.0, steps=5,
+                                           jacobi_iters=33))
+
+    def test_double_submit_rejected(self):
+        farm = SimulationFarm(cavity.config(N, **KW), n_slots=2)
+        req = cavity.sim_request(N, re=100.0, steps=5, **KW)
+        farm.submit(req)
+        with pytest.raises(ValueError, match="already submitted"):
+            farm.submit(req)
+
+
+class TestService:
+    def test_poll_lifecycle_and_eviction(self):
+        svc = SimulationService(cavity.config(N, **KW), n_slots=2)
+        a = svc.submit(cavity.sim_request(N, re=100.0, steps=40, **KW))
+        b = svc.submit(cavity.sim_request(N, re=200.0, steps=40, **KW))
+        c = svc.submit(cavity.sim_request(N, re=300.0, steps=10, **KW))
+        assert svc.poll(c)["status"] == "queued"
+        svc.run(10)
+        assert svc.poll(a)["status"] == "running"
+        assert svc.evict(a)
+        assert svc.poll(a)["status"] == "evicted"
+        # the freed slot admits the queued sim on the next step
+        svc.run(1)
+        assert svc.poll(c)["status"] == "running"
+        # an evicted sim resumes at its exact step and matches serial
+        ra = svc.result(a)
+        assert ra.steps_done == 40
+        ref = serial_reference(100.0, 40)
+        for f in FIELDS:
+            np.testing.assert_array_equal(ref[f], ra.state[f])
+        assert svc.result(b).steps_done == 40
+        assert svc.poll(c)["status"] == "done"
+        with pytest.raises(KeyError):
+            svc.poll(10_000)
+
+    def test_eviction_spills_through_checkpointer(self, tmp_path):
+        svc = SimulationService(cavity.config(N, **KW), n_slots=1,
+                                ckpt_dir=str(tmp_path))
+        a = svc.submit(cavity.sim_request(N, re=100.0, steps=30, **KW))
+        svc.run(12)
+        assert svc.evict(a)
+        # state went to disk, not host RAM
+        assert svc._evicted[a].state is None
+        assert any(p.name.startswith("step_") for p in tmp_path.iterdir())
+        ra = svc.result(a)
+        ref = serial_reference(100.0, 30)
+        for f in FIELDS:
+            np.testing.assert_array_equal(ref[f], ra.state[f])
+
+    def test_steady_state_termination(self):
+        svc = SimulationService(cavity.config(N, **KW), n_slots=1,
+                                check_steady_every=8)
+        a = svc.submit(cavity.sim_request(N, re=100.0, steps=5000,
+                                          steady_tol=1e-4, **KW))
+        ra = svc.result(a)
+        assert ra.terminated == "steady"
+        assert ra.steps_done < 5000
+
+
+class TestTaylorGreenEnsemble:
+    def test_mixed_viscosity_matches_serial(self):
+        base = taylor_green.config(N, nu=0.1)
+        farm = SimulationFarm(base, n_slots=3)
+        nus = (0.05, 0.1, 0.2)
+        sids = {farm.submit(taylor_green.sim_request(N, nu=nu, steps=12)): nu
+                for nu in nus}
+        results = farm.run_until_drained()
+        for sid, nu in sids.items():
+            cfg = taylor_green.config(N, nu=nu)
+            solver = NavierStokes3D(cfg)
+            state = solver.init_state()
+            step = solver.make_step()
+            for _ in range(12):
+                state = step(state)
+            ref = jax.device_get(state)
+            for f in FIELDS:
+                np.testing.assert_array_equal(ref[f], results[sid].state[f])
+
+
+class TestEnsembleExecutor:
+    def test_write_read_clear_slots(self):
+        ex = EnsembleExecutor(cavity.config(N, **KW), n_slots=3)
+        cfg = cavity.config(N, re=150.0, **KW)
+        ex.write_slot(1, params_from_config(cfg))
+        assert ex.params["nu"][1] == np.float32(cfg.nu)
+        got = ex.read_slot(1)
+        assert set(FIELDS) <= set(got)
+        ex.clear_slot(1)
+        assert ex.params["lid_velocity"][1] == 0.0
+        ke = ex.kinetic_energy()
+        assert ke.shape == (3,)
+
+
+class TestBatchedKernelTemplates:
+    """The generator-level slot axis: JNP vmap and the batched 3DBLOCK grid."""
+
+    def _arrays(self, nslots, shape, pad, seed=0):
+        rng = np.random.RandomState(seed)
+        mk = lambda s: jnp.asarray(
+            rng.randn(nslots, *[d + 2 * pad for d in s]).astype(np.float32))
+        return mk(shape)
+
+    def test_jnp_batched_equals_per_slot(self):
+        kern = generate(stencil3d.DESCRIPTORS["JACOBI_PRESSURE"],
+                        stencil3d.BODIES["JACOBI_PRESSURE"], template="JNP")
+        nslots, shape = 3, (8, 8, 8)
+        p = self._arrays(nslots, shape, 1, seed=1)
+        rhs = self._arrays(nslots, shape, 0, seed=2)
+        out = kern.apply_batched({"p": p, "rhs": rhs}, h=0.1, omega=0.9)
+        for s in range(nslots):
+            ref = kern({"p": p[s], "rhs": rhs[s]}, h=0.1, omega=0.9)
+            np.testing.assert_array_equal(ref["p"], out["p"][s])
+
+    def test_jnp_batched_per_slot_params(self):
+        kern = generate(stencil3d.DESCRIPTORS["JACOBI_PRESSURE"],
+                        stencil3d.BODIES["JACOBI_PRESSURE"], template="JNP")
+        nslots, shape = 3, (8, 8, 8)
+        p = self._arrays(nslots, shape, 1, seed=3)
+        rhs = self._arrays(nslots, shape, 0, seed=4)
+        omegas = jnp.asarray([0.7, 0.9, 1.0], jnp.float32)
+        out = kern.apply_batched({"p": p, "rhs": rhs}, h=0.1, omega=omegas,
+                                 batched_params=("omega",))
+        for s in range(nslots):
+            ref = kern({"p": p[s], "rhs": rhs[s]}, h=0.1, omega=omegas[s])
+            np.testing.assert_array_equal(ref["p"], out["p"][s])
+
+    def test_pallas_batched_matches_jnp(self):
+        desc = stencil3d.DESCRIPTORS["JACOBI_PRESSURE"]
+        body = stencil3d.BODIES["JACOBI_PRESSURE"]
+        pallas = generate(desc, body, template="3DBLOCK", interpret=True)
+        oracle = generate(desc, body, template="JNP")
+        nslots, shape = 2, (8, 8, 8)
+        p = self._arrays(nslots, shape, 1, seed=5)
+        rhs = self._arrays(nslots, shape, 0, seed=6)
+        got = pallas.apply_batched({"p": p, "rhs": rhs}, h=0.1, omega=1.0)
+        want = oracle.apply_batched({"p": p, "rhs": rhs}, h=0.1, omega=1.0)
+        np.testing.assert_allclose(np.asarray(got["p"]),
+                                   np.asarray(want["p"]), atol=1e-6)
+
+    def test_pallas_batched_rejects_per_slot_params(self):
+        desc = stencil3d.DESCRIPTORS["JACOBI_PRESSURE"]
+        pallas = generate(desc, stencil3d.BODIES["JACOBI_PRESSURE"],
+                          template="3DBLOCK", interpret=True)
+        with pytest.raises(NotImplementedError):
+            pallas.apply_batched({"p": jnp.zeros((2, 10, 10, 10)),
+                                  "rhs": jnp.zeros((2, 8, 8, 8))},
+                                 h=0.1, omega=jnp.ones((2,)),
+                                 batched_params=("omega",))
+
+
+class TestBatchedMoL:
+    def test_batched_integrators_match_serial(self):
+        def rhs(y, t):
+            return {"u": -0.5 * y["u"] + jnp.sin(t)}
+
+        ys = [{"u": jnp.full((4,), v, jnp.float32)} for v in (1.0, 2.0, 3.0)]
+        ts = jnp.asarray([0.0, 0.1, 0.2], jnp.float32)
+        dts = jnp.asarray([0.01, 0.02, 0.005], jnp.float32)
+        stacked = stack_trees(ys)
+        for name, integ in mol.INTEGRATORS.items():
+            batched = mol.BATCHED_INTEGRATORS[name]
+            out = jax.jit(lambda y, t, dt: batched(rhs, y, t, dt))(
+                stacked, ts, dts)
+            for s in range(3):
+                ref = integ(rhs, ys[s], ts[s], dts[s])
+                np.testing.assert_allclose(np.asarray(ref["u"]),
+                                           np.asarray(out["u"][s]),
+                                           rtol=1e-6)

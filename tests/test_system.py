@@ -41,3 +41,9 @@ def test_quickstart_example():
 def test_custom_kernel_example():
     out = _run([os.path.join(REPO, "examples", "custom_kernel.py")])
     assert "OK" in out
+
+
+def test_ensemble_sweep_example():
+    out = _run([os.path.join(REPO, "examples", "ensemble_sweep.py"),
+                "--n", "16", "--t-end", "2.0"])
+    assert "OK" in out

@@ -10,7 +10,7 @@ import json
 import sys
 import time
 
-BENCHES = ["stencil", "cavity", "ensemble", "scaling", "roofline"]
+BENCHES = ["stencil", "cavity", "ensemble", "scaling", "roofline", "dist"]
 
 
 def main():

@@ -1,0 +1,18 @@
+"""repro.dist — the distribution substrate.
+
+The paper's framework distributes structured-grid computation across a
+hybrid machine by pushing ALL placement decisions (domain decomposition,
+ghost-zone exchange, device mapping) into a substrate layer so application
+code stays serial-looking.  This package is that layer for the jax world:
+
+  sharding           — declarative PartitionSpec rules (FSDP×TP layouts,
+                       divisibility guards, batch/cache specs, mesh modes)
+  compression        — int8 error-feedback gradient allreduce for the
+                       slow (cross-pod / DCN-class) links
+  pipeline_parallel  — GPipe microbatch relay over a ``pod`` axis
+
+Model/optimizer code never names a device: it receives a ``ShardCfg`` and
+spec trees built here, and the same numerics run single-device (mesh=None)
+or across a pod slice unchanged.
+"""
+from repro.dist import compression, pipeline_parallel, sharding  # noqa: F401

@@ -1,0 +1,66 @@
+"""Gradient compression for the slow links: int8 + error feedback.
+
+Inter-pod (DCN-class) links are ~10× slower than in-pod ICI, and the DP
+gradient all-reduce is the only cross-pod traffic in the dp posture — so
+it is the one transfer worth compressing.  Scheme:
+
+  1. add the carried error-feedback residual to the local gradient
+  2. symmetric per-tensor int8 quantization (scale = amax/127)
+  3. all-reduce the int8 payload (4× fewer wire bytes than fp32;
+     modeled here as a pmean of the dequantized values)
+  4. keep the NEW quantization error as the next step's residual
+
+Error feedback (Seide et al. 1-bit SGD; Karimireddy et al. EF-SGD) makes
+the compression unbiased over time: the residual re-enters the next
+step's gradient, so the series of applied updates telescopes to the true
+gradient sum and convergence matches uncompressed SGD/Adam to first
+order.  ``train/step.py::_make_dp_train_step(compress_pod_grads=True)``
+threads the residual through the step as explicit (n_pod,)-leading state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(g):
+    """Symmetric per-tensor int8 quantization.
+
+    Returns ``(q, scale, err)`` with ``q*scale + err == g`` (fp32 exact up
+    to one rounding): q int8 in [-127, 127], scale fp32 scalar, err the
+    quantization residual in g's shape — the error-feedback carry.
+    """
+    gf = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    err = gf - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def dequantize_int8(q, scale, shape):
+    """Inverse of ``quantize_int8`` (up to the quantization error)."""
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def ef_allreduce_mean(g, err, axis_name: str):
+    """Error-feedback int8 all-reduce-mean over ``axis_name``.
+
+    Call under ``shard_map``/``pmap`` with per-device gradient ``g`` and
+    carried residual ``err`` (same shape).  Returns ``(grad_mean,
+    new_err)``: the cross-device mean of the int8-compressed compensated
+    gradients, and the residual to carry into the next step.  Wire bytes:
+    1 per element + one fp32 scale, vs 4 per element exact.
+    """
+    comp = g.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale, new_err = quantize_int8(comp)
+    deq = dequantize_int8(q, scale, comp.shape)
+    return lax.pmean(deq, axis_name), new_err
+
+
+def wire_bytes(n_elements: int, *, compressed: bool) -> int:
+    """Per-hop payload bytes for one gradient tensor (benchmark model)."""
+    if compressed:
+        return n_elements + 4          # int8 payload + fp32 scale
+    return 4 * n_elements

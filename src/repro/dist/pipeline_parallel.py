@@ -1,0 +1,88 @@
+"""GPipe pipeline parallelism over a ``pod`` mesh axis.
+
+The layer stack is cut into ``n_stage`` contiguous stages, one per pod;
+the batch is cut into microbatches that relay through the stages
+bucket-brigade style (``ppermute`` neighbor exchange — the paper's
+ghost-zone pattern applied to the LAYER axis instead of the grid).  With
+M microbatches and S stages the schedule runs M+S-1 ticks; every stage is
+busy except the S-1-tick fill/drain bubble, and only (mb, seq, d_model)
+activations ever cross a pod boundary.
+
+The relay is numerically exact: each microbatch visits the same layers in
+the same order as the sequential reference, so outputs agree to fp
+rounding (tested at 2e-4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def stage_params(tree, mesh, axis: str = "pod"):
+    """PartitionSpecs slicing the leading (layer-stacked) axis of every
+    leaf over the pipeline ``axis`` — stage s holds layers
+    [s*L/S, (s+1)*L/S)."""
+    n = mesh.shape[axis]
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        assert shape and shape[0] % n == 0, (
+            f"layer dim {shape} must divide over {n} pipeline stages")
+        return P(axis, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(spec, tree)
+
+
+def gpipe_forward(cfg: ModelConfig, mesh, apply_layer, ws, x,
+                  n_microbatch: int = 4, axis: str = "pod"):
+    """Microbatched pipeline forward matching the sequential stack.
+
+    ``apply_layer(w_i, h) -> h`` is one layer; ``ws`` is a pytree of
+    layer-stacked params (leading axis ``cfg.num_layers``); ``x`` is the
+    global (B, ...) activation.  Stage s applies its contiguous layer
+    slice; microbatch m leaves the last stage at tick m + n_stage - 1.
+    """
+    n_stage = mesh.shape[axis]
+    n_layers = jax.tree.leaves(ws)[0].shape[0]
+    assert n_layers == cfg.num_layers, (n_layers, cfg.num_layers)
+    assert n_layers % n_stage == 0, (n_layers, n_stage)
+    b = x.shape[0]
+    assert b % n_microbatch == 0, (b, n_microbatch)
+    mb = b // n_microbatch
+    fwd = [(i, (i + 1) % n_stage) for i in range(n_stage)]
+
+    def local(ws_l, x_full):
+        stage = lax.axis_index(axis)
+        xm = x_full.reshape(n_microbatch, mb, *x_full.shape[1:])
+
+        def apply_stage(h):
+            return lax.scan(lambda h, w: (apply_layer(w, h), None),
+                            h, ws_l)[0]
+
+        act = jnp.zeros_like(xm[0])
+        out = jnp.zeros_like(xm)
+        for t in range(n_microbatch + n_stage - 1):
+            # stage 0 injects microbatch t; everyone else takes the
+            # neighbor's tick-(t-1) output (the wrap-around to stage 0 is
+            # discarded by the select)
+            recv = lax.ppermute(act, axis, fwd)
+            inject = xm[min(t, n_microbatch - 1)]
+            act = apply_stage(jnp.where(stage == 0, inject, recv))
+            m = t - (n_stage - 1)          # microbatch leaving the last stage
+            if 0 <= m < n_microbatch:
+                out = out.at[m].set(
+                    jnp.where(stage == n_stage - 1, act, out[m]))
+        # only the last stage holds real outputs; sum-broadcast them
+        out = lax.psum(
+            out * (stage == n_stage - 1).astype(out.dtype), axis)
+        return out.reshape(x_full.shape)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(stage_params(ws, mesh, axis), P()),
+        out_specs=P(), check_vma=False)
+    return fn(ws, x)

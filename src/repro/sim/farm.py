@@ -46,16 +46,22 @@ def static_key(config: CFDConfig, n_slots: int) -> tuple:
     )
 
 
-def compiled_ensemble_step(config: CFDConfig, n_slots: int):
-    """(solver, jitted chunked ensemble step) for the static signature."""
-    key = static_key(config, n_slots)
+def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
+                           slot_axis: str = "data"):
+    """(solver, jitted chunked ensemble step) for the static signature.
+
+    ``mesh`` extends the signature (a Mesh is hashable): multi-device
+    farms cache separately from single-device ones of the same shape.
+    """
+    key = static_key(config, n_slots) + (mesh, slot_axis if mesh else None)
     hit = _STEP_CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
         return hit
     _CACHE_STATS["misses"] += 1
     solver = NavierStokes3D(config)
-    _STEP_CACHE[key] = (solver, make_ensemble_step(solver))
+    _STEP_CACHE[key] = (solver, make_ensemble_step(
+        solver, mesh=mesh, slot_axis=slot_axis, n_slots=n_slots))
     return _STEP_CACHE[key]
 
 
@@ -114,13 +120,17 @@ class SimulationFarm:
     """Queue + slots + termination around one compiled ensemble step."""
 
     def __init__(self, base_config: CFDConfig, n_slots: int = 8,
-                 check_steady_every: int = 16):
+                 check_steady_every: int = 16, mesh=None,
+                 slot_axis: str = "data"):
         self.base_config = base_config
         self.n_slots = n_slots
         self.check_steady_every = check_steady_every
-        solver, run_k = compiled_ensemble_step(base_config, n_slots)
+        solver, run_k = compiled_ensemble_step(base_config, n_slots,
+                                               mesh=mesh,
+                                               slot_axis=slot_axis)
         self.exec = EnsembleExecutor(base_config, n_slots,
-                                     solver=solver, run_k=run_k)
+                                     solver=solver, run_k=run_k, mesh=mesh,
+                                     slot_axis=slot_axis)
         self.table = SlotTable(n_slots)
         self.results: dict[int, SimResult] = {}
         self.device_steps = 0

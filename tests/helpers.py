@@ -18,10 +18,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def run_with_devices(script: str, n_devices: int = 8, timeout: int = 600):
     """Run ``script`` with ``n_devices`` fake host devices; return stdout."""
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={n_devices} "
-        + env.get("XLA_FLAGS", "")
-    ).strip()
+    # drop any inherited device-count flag (e.g. the CI multidevice lane's)
+    # so the per-test count always wins
+    inherited = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={n_devices}"] + inherited)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
         [sys.executable, "-c", script],

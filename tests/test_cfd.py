@@ -83,6 +83,7 @@ print("OK")
 """
 
 
+@pytest.mark.multidevice
 def test_distributed_solver_matches_single_device():
     out = run_with_devices(DISTRIBUTED_EQUIV, n_devices=4)
     assert "OK" in out

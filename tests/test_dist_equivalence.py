@@ -10,6 +10,8 @@ import pytest
 
 from tests.helpers import run_with_devices
 
+pytestmark = pytest.mark.multidevice
+
 
 def test_mamba2_ssm_sp_matches_serial():
     script = """

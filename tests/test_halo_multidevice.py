@@ -2,7 +2,11 @@
 single-shard result — the distributed ghost zones are an implementation
 detail, not a numerical one.  Runs in subprocesses (device count is locked
 per process)."""
+import pytest
+
 from tests.helpers import run_with_devices
+
+pytestmark = pytest.mark.multidevice
 
 EXCHANGE_EQUIV = r"""
 import jax, jax.numpy as jnp, numpy as np

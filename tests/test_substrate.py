@@ -198,6 +198,7 @@ def test_warmup_cosine_schedule():
 # ---------------------------------------------------------------------------
 # sharding rules
 # ---------------------------------------------------------------------------
+@pytest.mark.multidevice
 def test_param_specs_divisibility_guard():
     """Rules only shard divisible dims (kv_heads=8 vs model=16 stays
     replicated; ff/vocab shard)."""
@@ -229,6 +230,7 @@ print("SPEC OK")
     assert "SPEC OK" in out
 
 
+@pytest.mark.multidevice
 def test_cache_specs_seq_sharded():
     script = """
 import jax, jax.numpy as jnp
@@ -328,6 +330,7 @@ def test_int8_quantize_error_feedback():
     assert rel < 0.02, rel
 
 
+@pytest.mark.multidevice
 def test_ef_allreduce_multidevice():
     script = """
 import jax, jax.numpy as jnp, numpy as np
@@ -360,6 +363,7 @@ print("EF OK")
 # ---------------------------------------------------------------------------
 # pipeline parallelism
 # ---------------------------------------------------------------------------
+@pytest.mark.multidevice
 def test_gpipe_forward_matches_sequential():
     script = """
 import jax, jax.numpy as jnp, numpy as np
@@ -393,6 +397,7 @@ print("GPIPE OK")
     assert "GPIPE OK" in out
 
 
+@pytest.mark.multidevice
 def test_checkpoint_elastic_reshard():
     """Save from one mesh, restore onto a DIFFERENT mesh/sharding (the
     N->M elastic restart): values must round-trip exactly."""

@@ -1,0 +1,24 @@
+"""Shared helpers for the decomposed-benchmark variants.
+
+Both bench_ensemble and bench_stencil report a decomposed row; they must
+pick the SAME shard count for the same host and format block sizes the
+same way, or the per-slot-grid-normalized numbers in ``BENCH_*.json``
+stop being comparable across benches.
+"""
+from __future__ import annotations
+
+
+def pick_shards(ndev: int, n: int) -> int:
+    """Largest supported shard count for an x-extent of ``n`` on ``ndev``
+    devices (powers of two only — the halo exchange is happiest on even
+    splits); 1 when the host cannot shard."""
+    return next((k for k in (8, 4, 2) if ndev >= k and n % k == 0), 1)
+
+
+def slot_grid(shape, decomposition, mesh) -> str:
+    """The per-device block of one slot's grid, as "nx x ny x nz"."""
+    local = list(shape)
+    if mesh is not None:
+        for a, name in dict(decomposition).items():
+            local[a] //= mesh.shape[name]
+    return "x".join(str(d) for d in local)

@@ -6,6 +6,11 @@ because per-step dispatch and per-op overheads amortize across the slot
 axis.  We measure sim-steps/sec for ensemble sizes 1/4/8/16 on the JNP
 path and report speedup over running the same work serially through
 ``GridDriver`` (one simulation at a time, the pre-farm workflow).
+
+Every row reports the per-slot grid block (``slot_grid`` × ``shards_per
+_slot``) so the slots × shards variant — each slot's grid decomposed over
+a "shard" mesh axis — lands in ``BENCH_*.json`` directly comparable to
+the undecomposed rows (same sim-steps/sec unit, explicit block size).
 """
 from __future__ import annotations
 
@@ -34,12 +39,13 @@ def _bench_serial(configs, steps):
     return time.perf_counter() - t0
 
 
-def _bench_farm(base, configs, steps):
+def _bench_farm(base, configs, steps, mesh=None, slot_axis="data"):
     import jax
 
     from repro.sim.farm import SimRequest, SimulationFarm
 
-    farm = SimulationFarm(base, n_slots=len(configs))
+    farm = SimulationFarm(base, n_slots=len(configs), mesh=mesh,
+                          slot_axis=slot_axis)
     # warm: run a throwaway batch of 1 step
     for c in configs:
         farm.submit(SimRequest(config=c, steps=1))
@@ -50,6 +56,38 @@ def _bench_farm(base, configs, steps):
     farm.run_until_drained()
     jax.block_until_ready(farm.exec.state)
     return time.perf_counter() - t0
+
+
+def _ugrid(shape) -> str:
+    from benchmarks._util import slot_grid
+
+    return slot_grid(shape, (), None)
+
+
+def _bench_decomposed(n, steps, n_slots=4):
+    """Slots × shards variant: same ensemble work with each slot's grid
+    decomposed over a "shard" mesh axis.  Runs at however many shards the
+    host allows (1 on the single-device CI harness — the degraded fast
+    path — so the row is always present and comparable)."""
+    import jax
+
+    from benchmarks._util import pick_shards, slot_grid
+    from repro.cfd import cavity
+    from repro.launch.mesh import make_mesh
+
+    shards = pick_shards(jax.device_count(), n)
+    kw = dict(jacobi_iters=20, decomposition=((0, "shard"),))
+    mesh = make_mesh((1, shards), ("slot", "shard"))
+    res = np.linspace(60.0, 400.0, n_slots)
+    configs = [cavity.config(n, re=float(r), **kw) for r in res]
+    base = cavity.config(n, **kw)
+    t = _bench_farm(base, configs, steps, mesh=mesh, slot_axis="slot")
+    return {
+        "ensemble": n_slots,
+        "shards_per_slot": shards,
+        "slot_grid": slot_grid(base.shape, kw["decomposition"], mesh),
+        "farm_steps_per_s": round(n_slots * steps / t, 1),
+    }
 
 
 def run(n: int = 16, steps: int = 80, quick: bool = False, repeats: int = 2
@@ -75,6 +113,10 @@ def run(n: int = 16, steps: int = 80, quick: bool = False, repeats: int = 2
         total = b * steps
         rows.append({
             "ensemble": b,
+            # per-slot grid size: decomposed and undecomposed runs are
+            # only comparable normalized to the block each device steps
+            "slot_grid": _ugrid(base.shape),
+            "shards_per_slot": 1,
             "serial_steps_per_s": round(total / t_serial, 1),
             "farm_steps_per_s": round(total / t_farm, 1),
             "speedup": round(t_serial / t_farm, 2),
@@ -87,6 +129,7 @@ def run(n: int = 16, steps: int = 80, quick: bool = False, repeats: int = 2
         "grid": f"{n}x{n}x4",
         "steps_per_sim": steps,
         "batches": rows,
+        "decomposed": _bench_decomposed(n, steps),
         "speedup_at_8": by_b[8]["speedup"],
         "passed": passed,
         "wall_s": round(time.time() - t_start, 1),

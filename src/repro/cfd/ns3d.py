@@ -105,6 +105,17 @@ class NavierStokes3D:
         self.driver = GridDriver(self.domain, mesh)
         self._build_bcs()
 
+    @property
+    def field_pspec(self):
+        """PartitionSpec of one field under this solver's decomposition.
+
+        The serial path shards state as ``field_pspec``; the simulation
+        farm stacks a slot axis in front and shards as
+        ``P(slot_axis, *field_pspec)`` (``dist.sharding.slot_field_spec``)
+        — same grid placement, one more batch dimension.
+        """
+        return self.domain.pspec()
+
     # ------------------------------------------------------------------ BCs
     def _bcs_for(self, lid_velocity) -> dict:
         """BC rule table; ``lid_velocity`` may be a traced per-slot scalar."""
@@ -184,6 +195,14 @@ class NavierStokes3D:
         ``params`` is the per-simulation scalar struct (see ``PARAM_KEYS``);
         the farm vmaps this function over a slot axis with batched params,
         the single-run path passes ``params_from_config`` constants.
+
+        Nothing here assumes the local block is the whole grid: ghost
+        zones come from ``exchange_pad`` driven by the domain's AxisSpecs,
+        so the same trace runs undecomposed (pure BC padding), decomposed
+        under ``shard_map`` (ppermute per face), and decomposed *under
+        vmap* on a slots × shards farm mesh — the collectives batch over
+        the unnamed slot axis, keeping every slot bitwise equal to its
+        serial decomposed run.
         """
         c = self.config
         if params is None:

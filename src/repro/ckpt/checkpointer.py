@@ -141,7 +141,9 @@ class Checkpointer:
     def restore(self, step: int, target_tree, shardings=None):
         """Restore into the structure of ``target_tree`` (shapes/dtypes
         validated).  ``shardings``: optional pytree of Shardings — arrays
-        are placed per-sharding (elastic N->M reshard)."""
+        are placed per-sharding (elastic N->M reshard).  A single
+        ``Sharding`` broadcasts to every leaf (all-same-layout trees,
+        e.g. a set of grid fields)."""
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -152,8 +154,16 @@ class Checkpointer:
                 f"checkpoint has {manifest['n_leaves']} leaves; target has "
                 f"{len(leaves)} — incompatible trees")
         out = []
-        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
-                        if shardings is not None else [None] * len(leaves))
+        if shardings is None:
+            shard_leaves = [None] * len(leaves)
+        elif isinstance(shardings, jax.sharding.Sharding):
+            shard_leaves = [shardings] * len(leaves)
+        else:
+            shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+        if len(shard_leaves) != len(leaves):
+            raise ValueError(
+                f"shardings has {len(shard_leaves)} leaves; target has "
+                f"{len(leaves)} — pass one Sharding to broadcast")
         for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
             arr = data[f"leaf_{i}"]
             if tuple(arr.shape) != tuple(np.shape(ref)):

@@ -11,6 +11,19 @@ does *chunked* stepping, a ``fori_loop`` of that step with a dynamic trip
 count, which is how the farm amortizes host dispatch when no slot is due to
 finish (the analogue of multi-token speculation windows in LM serving).
 
+Two mesh placements compose (the farm's slots × shards story):
+
+* **slot parallelism** — the slot axis spreads over a data-parallel mesh
+  axis (``dist.sharding.slot_spec``); slots never interact, so the
+  distributed batch is bitwise the single-device one.
+* **per-slot grid decomposition** — with ``config.decomposition`` set,
+  each slot's grid additionally decomposes over the named mesh axes
+  (``dist.sharding.slot_field_spec``), and the vmapped step runs the
+  driver's halo machinery (``exchange_pad`` / ``stencil_step_overlap``
+  ppermuting over those axes) inside the same ``shard_map``.  One large
+  simulation can then outgrow a single device while the farm keeps
+  batching across slots.
+
 The descriptor-generated kernels batch the same way one level down:
 ``GeneratedKernel.apply_batched`` vmaps the JNP template and gives the
 3DBLOCK Pallas template a leading batch axis in its grid/BlockSpecs; the
@@ -18,10 +31,13 @@ solver-level vmap used here subsumes both for the full CFD step.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.cfd.ns3d import PARAM_KEYS, CFDConfig, NavierStokes3D
 
@@ -29,6 +45,43 @@ from repro.cfd.ns3d import PARAM_KEYS, CFDConfig, NavierStokes3D
 def stack_trees(trees):
     """Stack a list of identically-structured pytrees on a new slot axis 0."""
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def plan_decomposition(config: CFDConfig, mesh,
+                       slot_axis: str | None = None
+                       ) -> tuple[CFDConfig, dict]:
+    """Resolve ``config.decomposition`` against the farm mesh.
+
+    Returns ``(solver_config, active)`` where ``active`` maps array axis ->
+    mesh axis for every decomposed axis whose mesh extent is > 1, and
+    ``solver_config`` is ``config`` with exactly that decomposition.  Axes
+    of extent 1 are dropped: a 1-shard mesh degrades to the plain
+    slot-parallel fast path (same executable shape as an undecomposed
+    farm) instead of threading no-op collectives through the step.
+
+    Raises ``ValueError`` when a decomposition is requested without a
+    mesh, or fails ``dist.sharding.validate_decomposition`` (duplicate /
+    out-of-range array axis, unknown mesh axis, decomposing over the slot
+    axis).  All validation runs BEFORE the extent-1 filter, so a
+    mis-assembled config fails identically on a 1-shard laptop mesh and a
+    real pod.
+    """
+    if not config.decomposition:
+        return config, {}
+    if mesh is None:
+        raise ValueError(
+            f"config.decomposition={tuple(config.decomposition)!r} asks for "
+            "per-slot grid decomposition, which needs a farm mesh naming "
+            "those axes (SimulationFarm(..., mesh=make_mesh((slots, shards), "
+            "('slot', 'shard')))); got mesh=None")
+    from repro.dist.sharding import validate_decomposition
+
+    pairs = validate_decomposition(config.decomposition, len(config.shape),
+                                   mesh.axis_names, slot_axis=slot_axis)
+    active = {a: n for a, n in pairs if mesh.shape[n] > 1}
+    solver_cfg = dataclasses.replace(
+        config, decomposition=tuple(sorted(active.items())))
+    return solver_cfg, active
 
 
 def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
@@ -41,6 +94,11 @@ def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
     data-parallel mesh axis (vmap × shard_map): each device advances its
     slice of the resident simulations, and because slots never interact,
     the distributed batch is bitwise-identical to the single-device one.
+
+    When the solver's domain is decomposed (slots × shards), each field is
+    additionally sharded over the decomposition's mesh axes and the
+    vmapped step exchanges ghost zones over them; the result is bitwise
+    the serial ``GridDriver`` run of the same decomposition.
     """
     vstep = jax.vmap(solver._step_local)
 
@@ -50,17 +108,21 @@ def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
     if mesh is None:
         return jax.jit(run_k)
 
-    from jax.sharding import PartitionSpec as P
-
-    from repro.dist.sharding import slot_spec
+    from repro.dist.sharding import slot_field_spec, slot_spec
 
     # divisibility-guarded like every substrate rule: a slot count that
     # does not divide over the axis runs replicated (correct, just not
     # parallel) rather than erroring
-    sp = slot_spec(mesh, n_slots if n_slots is not None
-                   else mesh.shape[slot_axis], axis=slot_axis)
-    fn = jax.shard_map(run_k, mesh=mesh, in_specs=(sp, sp, P()),
-                       out_specs=sp, check_vma=False)
+    n = n_slots if n_slots is not None else mesh.shape[slot_axis]
+    sp = slot_spec(mesh, n, axis=slot_axis)
+    decomp = dict(solver.domain.decomposition)
+    if decomp:
+        state_spec = slot_field_spec(mesh, n, solver.config.shape, decomp,
+                                     slot_axis=slot_axis)
+    else:
+        state_spec = sp
+    fn = jax.shard_map(run_k, mesh=mesh, in_specs=(state_spec, sp, P()),
+                       out_specs=state_spec, check_vma=False)
     return jax.jit(fn)
 
 
@@ -75,19 +137,31 @@ class EnsembleExecutor:
     def __init__(self, config: CFDConfig, n_slots: int,
                  solver: NavierStokes3D | None = None, run_k=None,
                  mesh=None, slot_axis: str = "data"):
-        if config.decomposition:
-            raise NotImplementedError(
-                "the ensemble executor batches over slots on one device "
-                "mesh; per-slot grid decomposition is not supported")
+        solver_cfg, decomp = plan_decomposition(config, mesh,
+                                                slot_axis=slot_axis)
         self.config = config
+        self.decomposition = decomp    # active per-slot grid decomposition
         self.n_slots = n_slots
         self.mesh = mesh
-        self.solver = solver if solver is not None else NavierStokes3D(config)
+        self.slot_axis = slot_axis
+        self.solver = solver if solver is not None else NavierStokes3D(
+            solver_cfg, mesh if decomp else None)
         self._run_k = run_k if run_k is not None else make_ensemble_step(
             self.solver, mesh=mesh, slot_axis=slot_axis, n_slots=n_slots)
         fresh = self.solver.init_state()
         self._fresh = fresh            # per-slot initial state (unbatched)
         self.state = stack_trees([fresh] * n_slots)
+        if mesh is not None:
+            # pin the resident batch to its farm layout up front: slot axis
+            # over `slot_axis`, grid axes over the active decomposition —
+            # admissions then scatter into place instead of re-laying-out
+            from repro.dist.sharding import slot_field_spec, slot_spec
+
+            spec = (slot_field_spec(mesh, n_slots, solver_cfg.shape, decomp,
+                                    slot_axis=slot_axis)
+                    if decomp else slot_spec(mesh, n_slots, axis=slot_axis))
+            self.state = jax.device_put(self.state,
+                                        NamedSharding(mesh, spec))
         # per-slot scalars: host-authoritative (like the engine's slot
         # lengths), mirrored to a device struct only when admission dirties
         # them — steps between admissions ship nothing host->device
@@ -99,14 +173,39 @@ class EnsembleExecutor:
                                  for f in ("vx", "vy", "vz"))))
 
     # -- slot I/O -------------------------------------------------------------
+    def state_template(self) -> dict:
+        """Host zeros with one slot's field shapes/dtypes — the restore
+        template for spilled-to-disk evictions (no device gather: only
+        metadata of the fresh per-slot state is read)."""
+        return {k: np.zeros(v.shape, v.dtype)
+                for k, v in self._fresh.items()}
+
+    def slot_sharding(self) -> jax.sharding.Sharding | None:
+        """Sharding of ONE slot's fields (grid axes only) on a decomposed
+        farm — what evict must gather from and readmit must scatter back
+        to; None when slots are not grid-decomposed."""
+        if self.mesh is None or not self.decomposition:
+            return None
+        return NamedSharding(self.mesh, self.solver.field_pspec)
+
     def write_slot(self, slot: int, params: dict, state: dict | None = None):
         """Admit a simulation: install its parameters and (re)set its fields.
 
         ``state=None`` writes the case's fresh initial state (new run);
-        passing a host state dict readmits an evicted simulation.
+        passing a host state dict readmits an evicted simulation — on a
+        decomposed farm the host fields are scattered to the slot's shard
+        layout before entering the resident batch.
         """
+        sh = self.slot_sharding()
+        # host -> shards directly (device_put scatters a numpy array
+        # per-shard); staging through jnp.asarray would first materialize
+        # the FULL field on the default device — the one thing a
+        # decomposed slot must never need
+        place = ((lambda v: v if isinstance(v, jax.Array)
+                  else jax.device_put(np.asarray(v), sh))
+                 if sh is not None else jnp.asarray)
         src = self._fresh if state is None else {
-            k: jnp.asarray(v) for k, v in state.items()}
+            k: place(v) for k, v in state.items()}
         self.state = jax.tree_util.tree_map(
             lambda full, one: lax.dynamic_update_index_in_dim(
                 full, one.astype(full.dtype), slot, 0),

@@ -24,7 +24,9 @@ import jax
 
 from repro.cfd.ns3d import CFDConfig, NavierStokes3D, params_from_config
 from repro.serve.slots import SlotTable
-from repro.sim.ensemble import EnsembleExecutor, make_ensemble_step
+from repro.sim.ensemble import (
+    EnsembleExecutor, make_ensemble_step, plan_decomposition,
+)
 
 
 # -- compile cache -----------------------------------------------------------
@@ -52,6 +54,10 @@ def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
 
     ``mesh`` extends the signature (a Mesh is hashable): multi-device
     farms cache separately from single-device ones of the same shape.
+    With ``config.decomposition`` set, the solver is built against the
+    farm mesh so each slot's grid decomposes over the named axes (the
+    slots × shards path); a mesh whose decomposed axes all have extent 1
+    degrades to the plain slot-parallel executable.
     """
     key = static_key(config, n_slots) + (mesh, slot_axis if mesh else None)
     hit = _STEP_CACHE.get(key)
@@ -59,7 +65,9 @@ def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
         _CACHE_STATS["hits"] += 1
         return hit
     _CACHE_STATS["misses"] += 1
-    solver = NavierStokes3D(config)
+    solver_cfg, decomp = plan_decomposition(
+        config, mesh, slot_axis=slot_axis if mesh is not None else None)
+    solver = NavierStokes3D(solver_cfg, mesh if decomp else None)
     _STEP_CACHE[key] = (solver, make_ensemble_step(
         solver, mesh=mesh, slot_axis=slot_axis, n_slots=n_slots))
     return _STEP_CACHE[key]

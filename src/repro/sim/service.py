@@ -32,9 +32,11 @@ class SimulationService:
     """submit/poll/result over a SimulationFarm, with eviction hooks."""
 
     def __init__(self, base_config: CFDConfig, n_slots: int = 8,
-                 ckpt_dir: str | None = None, check_steady_every: int = 16):
+                 ckpt_dir: str | None = None, check_steady_every: int = 16,
+                 mesh=None, slot_axis: str = "data"):
         self.farm = SimulationFarm(base_config, n_slots,
-                                   check_steady_every=check_steady_every)
+                                   check_steady_every=check_steady_every,
+                                   mesh=mesh, slot_axis=slot_axis)
         self._evicted: dict[int, _Evicted] = {}
         self._requeued_progress: dict[int, int] = {}  # readmitted, waiting
         self._ckpt = Checkpointer(ckpt_dir, keep_last=0) if ckpt_dir else None
@@ -100,15 +102,20 @@ class SimulationService:
         return True
 
     def readmit(self, sid: int) -> bool:
-        """Re-queue an evicted simulation; it resumes at its exact step."""
+        """Re-queue an evicted simulation; it resumes at its exact step.
+
+        The restored fields stay HOST-side while the request waits in the
+        queue (readmission frees no slot by itself, and pinning a full
+        state on-device would re-take the memory eviction just released);
+        on a decomposed (slots × shards) farm ``write_slot`` scatters them
+        to the shard layout at admission time.
+        """
         ev = self._evicted.get(sid)
         if ev is None:
             return False
         state = ev.state
         if state is None:
-            template = {k: np.zeros(v.shape, v.dtype)
-                        for k, v in self.farm.exec.read_slot(0).items()}
-            state = self._ckpt.restore(sid, template)
+            state = self._ckpt.restore(sid, self.farm.exec.state_template())
             state = {k: np.asarray(v) for k, v in state.items()}
         req = dataclasses.replace(ev.req, init_state=state,
                                   step0=ev.steps_done, sid=sid)

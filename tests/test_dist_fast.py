@@ -15,6 +15,7 @@ every run:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
@@ -187,6 +188,100 @@ def test_slot_spec():
 
 
 # ---------------------------------------------------------------------------
+# slots x shards field specs (the 2-axis farm mesh)
+# ---------------------------------------------------------------------------
+def test_slot_field_spec_slot_times_shard():
+    mesh = _MeshStub(slot=2, shard=4)
+    spec = shd.slot_field_spec(mesh, 8, (16, 16, 4), ((0, "shard"),))
+    assert spec == P("slot", "shard", None, None)
+
+
+def test_slot_field_spec_two_axis_grid_decomposition():
+    mesh = _MeshStub(slot=2, sx=2, sy=2)
+    spec = shd.slot_field_spec(mesh, 4, (16, 16, 8), ((0, "sx"), (1, "sy")))
+    assert spec == P("slot", "sx", "sy", None)
+
+
+def test_slot_field_spec_undecomposed_grid():
+    mesh = _MeshStub(slot=4)
+    assert shd.slot_field_spec(mesh, 8, (16, 16, 4)) == \
+        P("slot", None, None, None)
+
+
+def test_slot_field_spec_indivisible_slots_replicate():
+    """Slots never interact -> the slot axis is guarded, not an error."""
+    mesh = _MeshStub(slot=2, shard=4)
+    spec = shd.slot_field_spec(mesh, 3, (16, 16, 4), ((0, "shard"),))
+    assert spec == P(None, "shard", None, None)
+
+
+def test_slot_field_spec_indivisible_grid_raises():
+    """Grid axes RAISE: halo code ppermutes assuming true shards, so a
+    silently replicated axis would be mis-sharded, not just unparallel."""
+    mesh = _MeshStub(slot=2, shard=4)
+    with pytest.raises(ValueError, match="not divisible"):
+        shd.slot_field_spec(mesh, 8, (10, 16, 4), ((0, "shard"),))
+
+
+def test_slot_field_spec_unknown_axes_raise():
+    mesh = _MeshStub(slot=2, shard=4)
+    with pytest.raises(ValueError, match="no slot axis"):
+        shd.slot_field_spec(mesh, 8, (16, 16, 4), ((0, "shard"),),
+                            slot_axis="slots")
+    with pytest.raises(ValueError, match="no axis 'model'"):
+        shd.slot_field_spec(mesh, 8, (16, 16, 4), ((0, "model"),))
+    with pytest.raises(ValueError, match="slot axis"):
+        shd.slot_field_spec(mesh, 8, (16, 16, 4), ((0, "slot"),))
+
+
+def test_slot_field_spec_bad_array_axis_raises():
+    mesh = _MeshStub(slot=2, shard=4)
+    with pytest.raises(ValueError, match="array axis 3"):
+        shd.slot_field_spec(mesh, 8, (16, 16, 4), ((3, "shard"),))
+
+
+def test_slot_field_spec_duplicate_array_axis_raises():
+    """One grid axis mapped twice must raise, not silently keep the last
+    mapping (dict() would dedup to half the requested parallelism)."""
+    mesh = _MeshStub(slot=2, sx=2, sy=2)
+    with pytest.raises(ValueError, match="more than once"):
+        shd.slot_field_spec(mesh, 8, (16, 16, 4), ((0, "sx"), (0, "sy")))
+
+
+def test_slot_field_spec_covers_eval_shape_state():
+    """The rule applied over a real solver state tree (eval_shape — no
+    arrays, no devices): every field of the slot-stacked ensemble state
+    gets the same P(slot, shard, ...) placement."""
+    from repro.cfd import cavity
+    from repro.cfd.ns3d import NavierStokes3D
+
+    solver = NavierStokes3D(cavity.config(16, jacobi_iters=20))
+    shapes = jax.eval_shape(solver.init_state)
+    mesh = _MeshStub(slot=2, shard=4)
+    specs = {k: shd.slot_field_spec(mesh, 8, v.shape, ((0, "shard"),))
+             for k, v in shapes.items()}
+    assert set(specs) >= {"vx", "vy", "vz", "p"}
+    for k, spec in specs.items():
+        assert spec == P("slot", "shard", None, None), k
+
+
+def test_slot_field_spec_matches_solver_field_pspec():
+    """dist's slot-stacked spec == P(slot, *solver.field_pspec): the two
+    layers agree on the grid placement by construction."""
+    from repro.cfd import cavity
+    from repro.cfd.ns3d import NavierStokes3D
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("slot", "shard"))
+    solver = NavierStokes3D(
+        cavity.config(16, jacobi_iters=20, decomposition=((0, "shard"),)),
+        mesh)
+    stacked = shd.slot_field_spec(mesh, 4, solver.config.shape,
+                                  solver.config.decomposition)
+    assert tuple(stacked)[1:] == tuple(solver.field_pspec)
+
+
+# ---------------------------------------------------------------------------
 # compression properties
 # ---------------------------------------------------------------------------
 @settings(max_examples=30)
@@ -251,3 +346,139 @@ def test_ef_allreduce_single_device_mesh():
 def test_wire_bytes_model():
     assert wire_bytes(1000, compressed=True) == 1004
     assert wire_bytes(1000, compressed=False) == 4000
+
+
+# ---------------------------------------------------------------------------
+# halo / BC properties (single-shard exchange_pad path — pure rules, no mesh)
+# ---------------------------------------------------------------------------
+# The slots x shards step trusts exchange_pad for every ghost zone, so the
+# farm's correctness reduces to these rules: any halo width >= the stencil
+# radius round-trips (the interior is untouched), ghost strips obey the BC
+# rule exactly, and an impossible width fails loudly.
+from repro.core.halo import (  # noqa: E402
+    AxisSpec, bc_dirichlet, bc_mirror, bc_neumann, exchange_pad,
+)
+
+_BC_FACTORIES = {
+    "dirichlet": lambda: bc_dirichlet(3.5),
+    "neumann": bc_neumann,
+    "mirror": lambda: bc_mirror(-1.0),
+}
+
+
+def _field(n, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n, n, n).astype(np.float32))
+
+
+def _specs(bc_name, periodic=False):
+    mk = _BC_FACTORIES[bc_name]
+    return tuple(AxisSpec(a, periodic=periodic, bc_lo=mk(), bc_hi=mk())
+                 for a in range(3))
+
+
+@settings(max_examples=25)
+@given(w=st.integers(1, 3), n=st.integers(4, 8), seed=st.integers(0, 999),
+       bc=st.sampled_from(sorted(_BC_FACTORIES)))
+def test_exchange_pad_roundtrips_interior_property(w, n, seed, bc):
+    """Padding never rewrites the interior: cropping the ghosts back off
+    recovers the original field bitwise, for every BC rule and any halo
+    width >= the stencil radius (the width the kernels will ask for)."""
+    u = _field(n, seed)
+    padded = exchange_pad(u, (w, w, w), _specs(bc))
+    assert padded.shape == (n + 2 * w,) * 3
+    crop = padded[w:-w, w:-w, w:-w]
+    np.testing.assert_array_equal(np.asarray(crop), np.asarray(u))
+
+
+@settings(max_examples=25)
+@given(wlo=st.integers(0, 3), whi=st.integers(0, 3), seed=st.integers(0, 999),
+       bc=st.sampled_from(sorted(_BC_FACTORIES)))
+def test_exchange_pad_one_sided_widths_property(wlo, whi, seed, bc):
+    """(lo, hi) one-sided widths (upwind/staggered stencils) round-trip
+    the same way."""
+    n = 6
+    u = _field(n, seed)
+    padded = exchange_pad(u, ((wlo, whi),) * 3, _specs(bc))
+    assert padded.shape == (n + wlo + whi,) * 3
+    crop = padded[wlo:n + wlo, wlo:n + wlo, wlo:n + wlo]
+    np.testing.assert_array_equal(np.asarray(crop), np.asarray(u))
+
+
+@settings(max_examples=25)
+@given(w=st.integers(1, 3), seed=st.integers(0, 999),
+       axis=st.integers(0, 2), bc=st.sampled_from(sorted(_BC_FACTORIES)))
+def test_exchange_pad_ghosts_obey_bc_rule_property(w, seed, axis, bc):
+    """Ghost strips are exactly what the BC rule defines: dirichlet fills
+    the value, neumann mirrors the adjacent interior, mirror flips the
+    sign of the mirrored interior — on both the lo and hi side."""
+    n = 6
+    u = _field(n, seed)
+    widths = [0, 0, 0]
+    widths[axis] = w
+    padded = np.asarray(exchange_pad(u, tuple(widths), _specs(bc)))
+    un = np.asarray(u)
+    lo = np.take(padded, range(0, w), axis=axis)
+    hi = np.take(padded, range(n + w, n + 2 * w), axis=axis)
+    near_lo = np.take(un, range(0, w), axis=axis)
+    near_hi = np.take(un, range(n - w, n), axis=axis)
+    if bc == "dirichlet":
+        np.testing.assert_array_equal(lo, np.full_like(lo, 3.5))
+        np.testing.assert_array_equal(hi, np.full_like(hi, 3.5))
+    elif bc == "neumann":
+        np.testing.assert_array_equal(lo, np.flip(near_lo, axis=axis))
+        np.testing.assert_array_equal(hi, np.flip(near_hi, axis=axis))
+    else:  # mirror(-1)
+        np.testing.assert_array_equal(lo, -np.flip(near_lo, axis=axis))
+        np.testing.assert_array_equal(hi, -np.flip(near_hi, axis=axis))
+
+
+@settings(max_examples=25)
+@given(w=st.integers(1, 3), seed=st.integers(0, 999), axis=st.integers(0, 2))
+def test_exchange_pad_periodic_wraps_property(w, seed, axis):
+    """Periodic ghosts are the wrapped far-side strips (what the ppermute
+    delivers on a real mesh, degenerated to one shard)."""
+    n = 6
+    u = _field(n, seed)
+    widths = [0, 0, 0]
+    widths[axis] = w
+    specs = tuple(AxisSpec(a, periodic=True) for a in range(3))
+    padded = np.asarray(exchange_pad(u, tuple(widths), specs))
+    ref = np.asarray(jnp.pad(u, [(wa, wa) if a == axis else (0, 0)
+                                 for a, wa in enumerate([w] * 3)],
+                             mode="wrap"))
+    np.testing.assert_array_equal(padded, ref)
+
+
+@settings(max_examples=15)
+@given(n=st.integers(2, 4), extra=st.integers(1, 3),
+       bc=st.sampled_from(sorted(_BC_FACTORIES)))
+def test_exchange_pad_width_beyond_extent_raises_property(n, extra, bc):
+    """A halo wider than the local block cannot be served by one exchange
+    hop — it must fail loudly, not wrap garbage."""
+    u = _field(n, 0)
+    w = n + extra
+    with pytest.raises(ValueError, match="halo width"):
+        exchange_pad(u, (w, w, w), _specs(bc))
+
+
+@settings(max_examples=25)
+@given(n=st.integers(5, 64), shards=st.integers(2, 8),
+       slots=st.integers(1, 8))
+def test_indivisible_grid_shard_combinations_raise_property(n, shards, slots):
+    """Every layer that could mis-shard an indivisible grid refuses
+    instead: the spec rule raises, and the driver's Domain validation
+    raises — never a silently replicated 'shard'."""
+    if n % shards == 0:
+        n += 1                      # force indivisibility
+        if n % shards == 0:         # (can't happen, but keep it obvious)
+            return
+    mesh = _MeshStub(slot=2, shard=shards)
+    with pytest.raises(ValueError, match="not divisible"):
+        shd.slot_field_spec(mesh, slots, (n, 16, 4), ((0, "shard"),))
+
+    from repro.core.driver import Domain, GridDriver
+
+    with pytest.raises(ValueError, match="not divisible"):
+        GridDriver(Domain(shape=(n, 16, 4), decomposition={0: "shard"}),
+                   mesh)

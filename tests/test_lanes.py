@@ -1,0 +1,178 @@
+"""CI lane hygiene: every test must resolve to exactly one lane.
+
+CI splits the suite into a fast lane (``-m "not multidevice"``) and a
+multidevice lane (``-m multidevice``).  Two failure modes would silently
+skew that split:
+
+* a test that spawns forced-device-count subprocesses but lacks the
+  ``multidevice`` marker runs (slowly, or wrongly) in the fast lane — the
+  AST guard below fails the fast lane when that happens;
+* a typo'd marker name would neither register nor select — caught at
+  collection time by ``--strict-markers`` (pyproject addopts), asserted
+  here so the option cannot quietly disappear.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+try:
+    import tomllib
+except ModuleNotFoundError:  # py3.10
+    tomllib = None
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(TESTS_DIR)
+
+# helpers that force a multi-device subprocess mesh; any test reaching one
+# of these must be in the multidevice lane
+_DEVICE_HELPERS = {"run_with_devices"}
+
+
+def _marker_names(decorator_list) -> set:
+    """Names of pytest.mark.* decorators (handles bare and called forms)."""
+    out = set()
+    for dec in decorator_list:
+        node = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(node, ast.Attribute):
+            parts = []
+            while isinstance(node, ast.Attribute):
+                parts.append(node.attr)
+                node = node.value
+            if isinstance(node, ast.Name):
+                parts.append(node.id)
+            dotted = ".".join(reversed(parts))
+            if dotted.startswith("pytest.mark."):
+                out.add(dotted.split(".", 2)[2])
+    return out
+
+
+def _module_markers(tree: ast.Module) -> set:
+    """Markers applied module-wide via ``pytestmark = pytest.mark.x`` (or a
+    list of marks)."""
+    out = set()
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "pytestmark"
+                for t in node.targets)):
+            continue
+        values = (node.value.elts if isinstance(node.value, (ast.List,
+                                                             ast.Tuple))
+                  else [node.value])
+        out |= _marker_names(values)
+    return out
+
+
+def _called_names(func: ast.AST) -> set:
+    out = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = (f.id if isinstance(f, ast.Name)
+                    else f.attr if isinstance(f, ast.Attribute) else None)
+            if name:
+                out.add(name)
+    return out
+
+
+def _device_reaching_names(tree: ast.Module, seed: set = frozenset()) -> set:
+    """Names of functions in this module that reach a device helper,
+    transitively: a local wrapper around ``run_with_devices`` flags its
+    callers too, so renaming-by-wrapping cannot evade the lane guard.
+    ``seed`` carries flagged names from shared helper modules.
+    (Name-based, scope-blind — deliberately over-approximate for a
+    guard.)"""
+    calls = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            calls.setdefault(node.name, set()).update(_called_names(node))
+    flagged = set(_DEVICE_HELPERS) | set(seed)
+    changed = True
+    while changed:
+        changed = False
+        for name, callees in calls.items():
+            if name not in flagged and callees & flagged:
+                flagged.add(name)
+                changed = True
+    return flagged
+
+
+def _shared_helper_flags() -> set:
+    """Device-reaching names defined in the NON-test modules of tests/
+    (helpers.py, conftest.py, ...): a wrapper around run_with_devices
+    that lives in a shared helper must flag its callers in every test
+    module."""
+    flagged = set()
+    for fname in sorted(os.listdir(TESTS_DIR)):
+        if fname.startswith("test_") or not fname.endswith(".py"):
+            continue
+        with open(os.path.join(TESTS_DIR, fname)) as f:
+            tree = ast.parse(f.read(), filename=fname)
+        flagged |= _device_reaching_names(tree) - _DEVICE_HELPERS
+    return flagged
+
+
+def _calls_device_helper(func: ast.AST, flagged: set) -> bool:
+    return bool(_called_names(func) & flagged)
+
+
+def _iter_tests(tree: ast.Module):
+    """(test function node, markers-in-scope) for every collected test."""
+    mod_marks = _module_markers(tree)
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name.startswith("test_"):
+            yield node, mod_marks | _marker_names(node.decorator_list)
+        elif isinstance(node, ast.ClassDef) and node.name.startswith("Test"):
+            cls_marks = mod_marks | _marker_names(node.decorator_list)
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and sub.name.startswith("test_"):
+                    yield sub, cls_marks | _marker_names(sub.decorator_list)
+
+
+def test_device_subprocess_tests_carry_the_multidevice_marker():
+    """Any test that forces a multi-device subprocess mesh must be marked
+    ``multidevice`` — otherwise the fast lane runs it and the multidevice
+    lane silently loses it."""
+    offenders = []
+    seed = _shared_helper_flags()
+    for fname in sorted(os.listdir(TESTS_DIR)):
+        if not (fname.startswith("test_") and fname.endswith(".py")):
+            continue
+        with open(os.path.join(TESTS_DIR, fname)) as f:
+            tree = ast.parse(f.read(), filename=fname)
+        flagged = _device_reaching_names(tree, seed)
+        for func, marks in _iter_tests(tree):
+            if _calls_device_helper(func, flagged) and \
+                    "multidevice" not in marks:
+                offenders.append(f"{fname}::{func.name}")
+    assert not offenders, (
+        "tests spawning forced-device subprocesses without the multidevice "
+        f"marker (would run in the fast lane): {offenders}")
+
+
+def test_strict_markers_is_enforced():
+    """``--strict-markers`` must stay in addopts: with it, a typo'd lane
+    marker is a collection error instead of a test that runs in (only)
+    the fast lane."""
+    path = os.path.join(ROOT, "pyproject.toml")
+    if tomllib is not None:
+        with open(path, "rb") as f:
+            cfg = tomllib.load(f)
+        addopts = cfg["tool"]["pytest"]["ini_options"].get("addopts", "")
+    else:
+        with open(path) as f:
+            addopts = next((line for line in f if "addopts" in line), "")
+    assert "--strict-markers" in addopts
+
+
+def test_lanes_partition_the_suite():
+    """The two lane expressions are complementary by construction
+    (``multidevice`` / ``not multidevice``): every collected test belongs
+    to exactly one lane.  Guarded here against someone adding a third
+    marker-based lane without updating the CI expressions."""
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert '-m "not multidevice"' in ci
+    assert "-m multidevice" in ci

@@ -116,6 +116,29 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         ck.restore(1, {"a": jnp.zeros((5,))})
 
 
+def test_checkpoint_single_sharding_broadcasts(tmp_path):
+    """A lone Sharding broadcasts to every leaf (the simulation farm
+    scatters one slot's fields this way); a mis-sized shardings tree is
+    an error, never a silent zip-truncation that restores one leaf."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.ckpt.checkpointer import Checkpointer
+    from repro.launch.mesh import make_mesh
+
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.arange(4.0), "b": {"c": jnp.arange(6.0)}}
+    ck.save(1, tree)
+    sh = NamedSharding(make_mesh((1,), ("shard",)), P())
+    restored = ck.restore(1, jax.tree.map(jnp.zeros_like, tree),
+                          shardings=sh)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert y.sharding == sh
+    with pytest.raises(ValueError, match="shardings has 1"):
+        ck.restore(1, jax.tree.map(jnp.zeros_like, tree),
+                   shardings={"a": sh})
+
+
 def test_kill_resume_end_to_end(tmp_path):
     """Kill a training run mid-flight; resume must continue from the last
     checkpoint with identical data order (the node-failure drill)."""

@@ -1,8 +1,9 @@
 """Paper Fig. 3 — lid-driven cavity validation against Ghia et al. (1982).
 
-Runs the descriptor-generated solver to (near) steady state at Re=100 and
-reports centerline-velocity deviations from Ghia's tabulated profiles.
-The paper shows the same comparison as its correctness evidence.
+Runs the descriptor-generated solver to (near) steady state at Re=100 —
+through the ``repro.api`` front door — and reports centerline-velocity
+deviations from Ghia's tabulated profiles.  The paper shows the same
+comparison as its correctness evidence.
 """
 from __future__ import annotations
 
@@ -10,12 +11,14 @@ import time
 
 
 def run(n: int = 48, t_end: float = 12.0, quick: bool = False) -> dict:
-    from repro.cfd import cavity
+    from repro import api
 
     if quick:
         n, t_end = 32, 6.0
     t0 = time.time()
-    solver, state, errors = cavity.run(n=n, t_end=t_end)
+    rt = api.runtime(n=n)
+    res = rt.run("cavity", t_end=t_end, re=100.0)
+    errors = res.diagnostics["ghia"]
     dt = time.time() - t0
     # tolerance scales with resolution: 1st/2nd-order scheme on n^2 grid
     tol = 0.035 if n >= 48 else 0.06

@@ -4,8 +4,10 @@ The farm's claim is the LM-serving claim transplanted: advancing B resident
 simulations with one vmapped step costs far less than B serial steps,
 because per-step dispatch and per-op overheads amortize across the slot
 axis.  We measure sim-steps/sec for ensemble sizes 1/4/8/16 on the JNP
-path and report speedup over running the same work serially through
-``GridDriver`` (one simulation at a time, the pre-farm workflow).
+path and report speedup over running the same work serially (one
+simulation at a time, the pre-farm workflow) — both sides resolved through
+the ``repro.api`` front door: ``Runtime.prepare`` hands the serial jitted
+step, ``Runtime.submit``/``drain`` drive the farm.
 
 Every row reports the per-slot grid block (``slot_grid`` × ``shards_per
 _slot``) so the slots × shards variant — each slot's grid decomposed over
@@ -19,43 +21,35 @@ import time
 import numpy as np
 
 
-def _bench_serial(configs, steps):
+def _bench_serial(rt, res_values, steps):
     import jax
-
-    from repro.cfd.ns3d import NavierStokes3D
 
     # warm the compile (the serial path shares one jitted step per config
     # signature via jax's own jit cache; time only the steady state)
-    solvers = [NavierStokes3D(c) for c in configs]
-    states = [s.init_state() for s in solvers]
-    step_fns = [s.make_step() for s in solvers]
-    for s, st in zip(step_fns, states):
-        jax.block_until_ready(s(st))
+    runs = [rt.prepare("cavity", re=float(r)) for r in res_values]
+    for pr in runs:
+        jax.block_until_ready(pr.step(pr.state))
     t0 = time.perf_counter()
-    for i, (fn, st) in enumerate(zip(step_fns, states)):
+    for pr in runs:
+        st = pr.state
         for _ in range(steps):
-            st = fn(st)
+            st = pr.step(st)
         jax.block_until_ready(st)
     return time.perf_counter() - t0
 
 
-def _bench_farm(base, configs, steps, mesh=None, slot_axis="data"):
-    import jax
-
-    from repro.sim.farm import SimRequest, SimulationFarm
-
-    farm = SimulationFarm(base, n_slots=len(configs), mesh=mesh,
-                          slot_axis=slot_axis)
+def _bench_farm(rt, res_values, steps):
     # warm: run a throwaway batch of 1 step
-    for c in configs:
-        farm.submit(SimRequest(config=c, steps=1))
-    farm.run_until_drained()
-    for c in configs:
-        farm.submit(SimRequest(config=c, steps=steps))
+    for r in res_values:
+        rt.submit("cavity", re=float(r), steps=1)
+    rt.drain()
+    sids = [rt.submit("cavity", re=float(r), steps=steps)
+            for r in res_values]
     t0 = time.perf_counter()
-    farm.run_until_drained()
-    jax.block_until_ready(farm.exec.state)
-    return time.perf_counter() - t0
+    out = rt.drain()
+    dt = time.perf_counter() - t0
+    assert all(out[s].steps_done == steps for s in sids)
+    return dt
 
 
 def _ugrid(shape) -> str:
@@ -72,20 +66,21 @@ def _bench_decomposed(n, steps, n_slots=4):
     import jax
 
     from benchmarks._util import pick_shards, slot_grid
-    from repro.cfd import cavity
-    from repro.launch.mesh import make_mesh
+    from repro import api
 
     shards = pick_shards(jax.device_count(), n)
-    kw = dict(jacobi_iters=20, decomposition=((0, "shard"),))
-    mesh = make_mesh((1, shards), ("slot", "shard"))
+    decomposition = ((0, "shard"),)
+    rt = api.runtime(n=n, n_slots=n_slots, jacobi_iters=20,
+                     mesh_shape=(1, shards), mesh_axes=("slot", "shard"),
+                     decomposition=decomposition)
     res = np.linspace(60.0, 400.0, n_slots)
-    configs = [cavity.config(n, re=float(r), **kw) for r in res]
-    base = cavity.config(n, **kw)
-    t = _bench_farm(base, configs, steps, mesh=mesh, slot_axis="slot")
+    t = _bench_farm(rt, res, steps)
+    base = rt.configure("cavity")
     return {
         "ensemble": n_slots,
         "shards_per_slot": shards,
-        "slot_grid": slot_grid(base.shape, kw["decomposition"], mesh),
+        "slot_grid": slot_grid(base.shape, decomposition,
+                               rt.mesh),
         "farm_steps_per_s": round(n_slots * steps / t, 1),
     }
 
@@ -95,7 +90,7 @@ def run(n: int = 16, steps: int = 80, quick: bool = False, repeats: int = 2
     """Ensemble members are the small/medium cases real sweeps are made of
     (UQ, parameter studies) — the regime where per-step dispatch and per-op
     overheads, not raw flops, bound serial throughput."""
-    from repro.cfd import cavity
+    from repro import api
 
     # quick trims the largest ensemble, not the measurement length: short
     # timing windows are noise-dominated and flake the >=2x gate
@@ -104,18 +99,18 @@ def run(n: int = 16, steps: int = 80, quick: bool = False, repeats: int = 2
     rows = []
     for b in batches:
         res = np.linspace(60.0, 400.0, b)
-        configs = [cavity.config(n, re=float(r), jacobi_iters=20)
-                   for r in res]
-        base = cavity.config(n, jacobi_iters=20)
-        t_serial = min(_bench_serial(configs, steps) for _ in range(repeats))
-        t_farm = min(_bench_farm(base, configs, steps)
+        serial_rt = api.runtime(n=n, jacobi_iters=20)
+        farm_rt = api.runtime(n=n, n_slots=b, jacobi_iters=20)
+        t_serial = min(_bench_serial(serial_rt, res, steps)
+                       for _ in range(repeats))
+        t_farm = min(_bench_farm(farm_rt, res, steps)
                      for _ in range(repeats))
         total = b * steps
         rows.append({
             "ensemble": b,
             # per-slot grid size: decomposed and undecomposed runs are
             # only comparable normalized to the block each device steps
-            "slot_grid": _ugrid(base.shape),
+            "slot_grid": _ugrid(serial_rt.configure("cavity").shape),
             "shards_per_slot": 1,
             "serial_steps_per_s": round(total / t_serial, 1),
             "farm_steps_per_s": round(total / t_farm, 1),

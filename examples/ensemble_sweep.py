@@ -1,9 +1,10 @@
-"""Reynolds-number sweep through the simulation farm.
+"""Reynolds-number sweep through the simulation farm — via ``repro.api``.
 
-Eight lid-driven cavity variants share one device batch: submit them all,
-drain the farm, and compare the steady centerline profiles — one compiled
-step served every simulation (submit/poll/result against the service, the
-multi-tenant surface).
+Eight lid-driven cavity variants share one device batch: submit them all
+through the runtime front door, drain, and compare the centerline profiles
+— one compiled step served every simulation.  The runtime resolves the
+``SimulationService`` (queue + slots + compile cache) behind
+``submit``/``result``; nothing here constructs a farm.
 
 Run:  PYTHONPATH=src python examples/ensemble_sweep.py [--n 24] [--slots 4]
 """
@@ -20,42 +21,37 @@ def main():
 
     import numpy as np
 
-    from repro.cfd import cavity
-    from repro.cfd.ns3d import NavierStokes3D
-    from repro.sim import SimulationService, compile_cache_stats
+    from repro import api
 
     reynolds = [50, 75, 100, 150, 200, 250, 300, 400]
-    svc = SimulationService(cavity.config(args.n), n_slots=args.slots)
+    rt = api.runtime(n=args.n, n_slots=args.slots)
     print(f"cavity sweep: {len(reynolds)} Reynolds numbers through "
           f"{args.slots} slots on a {args.n}^2 grid")
 
     t0 = time.time()
-    sids = {svc.submit(cavity.sim_request(args.n, re=float(re),
-                                          t_end=args.t_end,
-                                          tag=f"re{re}")): re
+    sids = {rt.submit("cavity", re=float(re), t_end=args.t_end,
+                      tag=f"re{re}"): re
             for re in reynolds}
-    results = {sid: svc.result(sid) for sid in sids}
+    results = {sid: rt.result(sid) for sid in sids}
     dt = time.time() - t0
 
     total_steps = sum(r.steps_done for r in results.values())
     print(f"{total_steps} sim-steps in {dt:.1f}s "
           f"({total_steps / dt:.0f} steps/s), "
-          f"{svc.farm.device_steps} device dispatch rounds")
-    print(f"compile cache: {compile_cache_stats()}")
+          f"{rt.device_steps()} device dispatch rounds")
+    print(f"compile cache: {api.compile_cache_stats()}")
 
     print("\n  Re    min u(y)   max u(y)   (centerline, z-averaged)")
+    u_max = []
     for sid, re in sorted(sids.items(), key=lambda kv: kv[1]):
         r = results[sid]
-        solver = NavierStokes3D(r.config)
-        _, u = cavity.centerline_u(solver, r.state)
+        _, u = rt.analyze(r)["centerline_u"]
+        u_max.append(float(np.max(u)))
         print(f"  {re:4d}  {float(np.min(u)):9.4f}  {float(np.max(u)):9.4f}"
               f"   ({r.steps_done} steps, {r.terminated})")
     # at fixed (short) time the lid's momentum has diffused less at higher
     # Re: the near-lid boundary layer is thinner, so the centerline maximum
     # decreases monotonically with Re — the expected developing-flow trend
-    u_max = [float(np.max(cavity.centerline_u(
-        NavierStokes3D(results[s].config), results[s].state)[1]))
-        for s, _ in sorted(sids.items(), key=lambda kv: kv[1])]
     ok = all(a > b for a, b in zip(u_max, u_max[1:]))
     print("OK" if ok else "FAILED: boundary layer did not thin with Re")
 

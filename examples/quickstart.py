@@ -1,62 +1,43 @@
-"""Quickstart: the paper's abstraction stack in five minutes.
+"""Quickstart: the runtime front door in three lines.
 
-1. declare a stencil kernel with a CaCUDA descriptor (paper Listing 1)
-2. the generator expands it against a template (Pallas 3DBLOCK on TPU,
-   fused-jnp elsewhere)
-3. the driver decomposes the domain and fills ghost zones
-4. run a few diffusion steps — with communication/computation overlap
+Scenarios are registered problem declarations (config builder + parameter
+schema + IC/analysis routines wired into the INITIAL/EVOLVE/ANALYSIS
+schedule bins); the Runtime resolves them onto an execution stack — serial
+driver here, simulation farm / decomposed mesh with the same three lines
+plus a ``mesh_shape``.  Nothing below names a kernel, a halo exchange, or
+a device: that is the point.
+
+    rt = api.runtime(n=24)
+    res = rt.run("cavity", t_end=2.0, re=100.0)
+    print(res.diagnostics["ghia"])
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import descriptor, generate
-from repro.core.halo import AxisSpec, bc_neumann, exchange_pad
+from repro import api
 
 
 def main():
-    # -- 1. declare the kernel (the cacuda.ccl equivalent) -------------------
-    DIFFUSE = descriptor(
-        "DIFFUSE",
-        stencil=(1, 1, 1, 1, 1, 1),
-        tile=(8, 8, 8),
-        u=dict(names=("u",), intent="SEPARATEINOUT", cached=True),
-        parameters=("dt", "h", "nu"),
-    )
+    # the registry: every problem the runtime can serve by name
+    print("registered scenarios:")
+    for name in api.scenario_names():
+        print(f"  {name:18s} {api.get_scenario(name).description}")
 
-    # -- 2. give the per-cell update; the generator builds the kernel --------
-    def body(ctx):
-        u = ctx["u"]
-        h, dt, nu = ctx.param("h"), ctx.param("dt"), ctx.param("nu")
-        lap = (u.at(1, 0, 0) + u.at(-1, 0, 0) + u.at(0, 1, 0)
-               + u.at(0, -1, 0) + u.at(0, 0, 1) + u.at(0, 0, -1)
-               - 6.0 * u.c) / h ** 2
-        return {"u": u.c + dt * nu * lap}
+    # -- the three-line quickstart -------------------------------------------
+    rt = api.runtime(n=24)
+    res = rt.run("cavity", t_end=2.0, re=100.0)
+    print(f"\ncavity Re=100, {res.steps_done} steps "
+          f"(terminated: {res.terminated})")
+    print("Ghia centerline deviation:",
+          {k: round(v, 4) for k, v in res.diagnostics["ghia"].items()})
 
-    kernel = generate(DIFFUSE, body, template="JNP")  # "3DBLOCK" on TPU
-
-    # -- 3. domain + ghost exchange -------------------------------------------
-    n = 32
-    u = jnp.zeros((n, n, n)).at[n // 2, n // 2, n // 2].set(1.0)
-    specs = [AxisSpec(array_axis=i, bc_lo=bc_neumann(), bc_hi=bc_neumann())
-             for i in range(3)]
-
-    # -- 4. step ------------------------------------------------------------------
-    @jax.jit
-    def step(u):
-        padded = exchange_pad(u, (1, 1, 1), specs)
-        return kernel({"u": padded}, dt=0.1, h=1.0, nu=1.0)["u"]
-
-    total0 = float(u.sum())
-    for i in range(50):
-        u = step(u)
-    total1 = float(u.sum())
-    print(f"diffused peak: {float(u.max()):.5f} (from 1.0)")
-    print(f"mass conserved: {total0:.6f} -> {total1:.6f}")
-    assert abs(total1 - total0) < 1e-3
-    print("OK — descriptor -> generated kernel -> driver halo -> stepped.")
+    # same front door, different scenario + per-run parameters
+    tg = rt.run("taylor_green", steps=40, nu=0.05)
+    err = tg.diagnostics["analytic_error"]
+    print(f"taylor_green nu=0.05: max |v - analytic| = "
+          f"{max(err['err_vx'], err['err_vy']):.2e} at t={err['t']:.3f}")
+    assert max(err["err_vx"], err["err_vy"]) < 5e-3
+    assert res.steps_done > 0
+    print("OK — scenario registry -> runtime -> driver stack, one surface.")
 
 
 if __name__ == "__main__":

@@ -2,3 +2,13 @@
 from repro import compat as _compat  # installs jax version shims on import
 
 _compat.install()
+
+
+def __getattr__(name):
+    # `from repro import api` without importing jax-heavy modules at
+    # package import (repro.api pulls in the sim/cfd stacks)
+    if name == "api":
+        import importlib
+
+        return importlib.import_module("repro.api")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

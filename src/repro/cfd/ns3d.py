@@ -55,6 +55,7 @@ class CFDConfig:
     jacobi_omega: float = 1.0
     fused_sweeps: int = 1                    # >1: communication-avoiding smoother
     template: str | None = None              # None -> backend default
+    interpret: bool = False                  # Pallas interpret mode (CPU 3DBLOCK)
     overlap: bool = True                     # interior/boundary split
     decomposition: tuple = ()                # e.g. ((0,"data"), (1,"model"))
 
@@ -88,6 +89,13 @@ def params_from_config(c: CFDConfig) -> dict:
     return {k: jnp.float32(vals[k]) for k in PARAM_KEYS}
 
 
+# Cases whose domain is fully periodic (no wall BCs, no wall masks).
+# "kelvin_helmholtz" shares the solver structure of "taylor_green" — its
+# shear-layer initial condition is owned by the scenario registry
+# (repro.sim.scenarios), not by the solver.
+PERIODIC_CASES = ("taylor_green", "kelvin_helmholtz")
+
+
 class NavierStokes3D:
     """The CFD application object: owns the driver, BCs, and the step."""
 
@@ -95,7 +103,7 @@ class NavierStokes3D:
 
     def __init__(self, config: CFDConfig, mesh: jax.sharding.Mesh | None = None):
         self.config = config
-        periodic = config.case == "taylor_green"
+        periodic = config.case in PERIODIC_CASES
         self.domain = Domain(
             shape=config.shape,
             spacing=(config.h,) * 3,
@@ -120,7 +128,7 @@ class NavierStokes3D:
     def _bcs_for(self, lid_velocity) -> dict:
         """BC rule table; ``lid_velocity`` may be a traced per-slot scalar."""
         c = self.config
-        if c.case == "taylor_green":
+        if c.case in PERIODIC_CASES:
             # fully periodic: no BC rules needed anywhere
             return {f: ((None,) * 3, (None,) * 3) for f in self.FIELDS}
         noslip = bc_moving_wall(0.0)
@@ -166,7 +174,7 @@ class NavierStokes3D:
         sh = self.driver.sharding()
         ones = np.ones(c.shape, np.float32)
         mx, my, mz = ones.copy(), ones.copy(), ones.copy()
-        if c.case != "taylor_green":
+        if c.case not in PERIODIC_CASES:
             mx[-1, :, :] = 0.0
             my[:, -1, :] = 0.0
             # z periodic: no vz mask
@@ -207,7 +215,7 @@ class NavierStokes3D:
         c = self.config
         if params is None:
             params = params_from_config(c)
-        kw = dict(template=c.template or "JNP")
+        kw = dict(template=c.template or "JNP", interpret=c.interpret)
         h = c.h
         dt, nu = params["dt"], params["nu"]
         bc = self._bcs_for(params["lid_velocity"])
@@ -281,9 +289,21 @@ class NavierStokes3D:
         The config's scalars are threaded as f32 constants through the same
         parameterized step the simulation farm vmaps, so a serial run is the
         exact reference for a farm slot with the same parameters.
+
+        The 3DBLOCK (Pallas) template takes scalar parameters as
+        compile-time literals — traced-scalar threading awaits the
+        scalar-prefetch ROADMAP item — so there the physics is baked into
+        the kernel as Python floats instead.
         """
+        c = self.config
         example = self.init_state()
-        params = params_from_config(self.config)
+        if c.template == "3DBLOCK":
+            fx, fy, fz = c.forcing
+            static = dict(nu=c.nu, dt=c.dt, lid_velocity=c.lid_velocity,
+                          fx=fx, fy=fy, fz=fz)
+            return self.driver.sharded_step_tree(
+                lambda s: self._step_local(s, static), example)
+        params = params_from_config(c)
         jstep = self.driver.sharded_step_tree(self._step_local, example, params)
         return lambda s: jstep(s, params)
 

@@ -14,6 +14,20 @@ State = dict  # pytree of fields
 
 BINS = ("INITIAL", "PRESTEP", "EVOL", "POSTSTEP", "ANALYSIS")
 
+# Accepted spellings for callers that use Cactus's long bin names (the
+# scenario registry registers into INITIAL/EVOLVE/ANALYSIS).
+BIN_ALIASES = {"EVOLVE": "EVOL", "POST": "POSTSTEP", "PRE": "PRESTEP"}
+
+
+def canonical_bin(bin: str) -> str:
+    """Resolve a bin name or alias to its canonical BINS entry."""
+    name = BIN_ALIASES.get(bin, bin)
+    if name not in BINS:
+        raise ScheduleError(
+            f"unknown schedule bin {bin!r} (have {BINS}, "
+            f"aliases {tuple(BIN_ALIASES)})")
+    return name
+
 
 @dataclasses.dataclass
 class _Entry:
@@ -40,8 +54,7 @@ class Schedule:
         after: tuple[str, ...] = (),
     ):
         """Decorator: schedule ``fn`` in ``bin`` with ordering constraints."""
-        if bin not in self._bins:
-            raise ScheduleError(f"unknown schedule bin {bin!r} (have {BINS})")
+        bin = canonical_bin(bin)
 
         def deco(fn):
             self._bins[bin].append(
@@ -52,7 +65,7 @@ class Schedule:
         return deco
 
     def _sorted(self, bin: str) -> list[_Entry]:
-        entries = self._bins[bin]
+        entries = self._bins[canonical_bin(bin)]
         names = {e.name for e in entries}
         # build edges: after=X means X -> self ; before=Y means self -> Y
         edges: dict[str, set[str]] = {e.name: set() for e in entries}

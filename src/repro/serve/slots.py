@@ -10,7 +10,7 @@ device-side state keyed by slot index.
 """
 from __future__ import annotations
 
-import queue
+import collections
 from typing import Any, Iterator
 
 
@@ -22,14 +22,31 @@ class SlotTable:
             raise ValueError(f"need at least one slot, got {n_slots}")
         self.n_slots = n_slots
         self._entries: list[Any | None] = [None] * n_slots
-        self._queue: "queue.Queue[Any]" = queue.Queue()
+        # admission queue, split by priority level: pop always serves the
+        # highest level first and is FIFO *within* a level, so urgent work
+        # (an interactive request, a readmission) jumps the backlog without
+        # reordering peers.  Level 0 is the default; the common case is a
+        # single-level FIFO, exactly the old behaviour.
+        self._queues: dict[int, collections.deque] = collections.defaultdict(
+            collections.deque)
 
     # -- intake ---------------------------------------------------------------
-    def submit(self, item: Any) -> None:
-        """Queue ``item`` for admission when a slot frees."""
-        self._queue.put(item)
+    def submit(self, item: Any, priority: int = 0) -> None:
+        """Queue ``item`` for admission when a slot frees.
+
+        Higher ``priority`` levels admit first; ties admit in submission
+        order (FIFO within a level).
+        """
+        self._queues[int(priority)].append(item)
 
     # -- admission ------------------------------------------------------------
+    def _pop_next(self) -> Any | None:
+        for prio in sorted(self._queues, reverse=True):
+            q = self._queues[prio]
+            if q:
+                return q.popleft()
+        return None
+
     def admit_next(self) -> tuple[int, Any] | None:
         """Pop the next queued item into the first free slot.
 
@@ -39,9 +56,8 @@ class SlotTable:
         slot = next(self.free_slots(), None)
         if slot is None:
             return None
-        try:
-            item = self._queue.get_nowait()
-        except queue.Empty:
+        item = self._pop_next()
+        if item is None:
             return None
         self._entries[slot] = item
         return slot, item
@@ -76,9 +92,9 @@ class SlotTable:
 
     @property
     def n_queued(self) -> int:
-        return self._queue.qsize()
+        return sum(len(q) for q in self._queues.values())
 
     @property
     def idle(self) -> bool:
         """Nothing resident and nothing waiting."""
-        return self.n_active == 0 and self._queue.empty()
+        return self.n_active == 0 and self.n_queued == 0

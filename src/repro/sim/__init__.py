@@ -9,16 +9,27 @@ cache so new work of an already-seen shape never recompiles.
     ensemble.py   the device layer — slot-stacked state, one step for all
     farm.py       the scheduler — queue, slots, termination, compile cache
     service.py    the front-end — submit/poll/result + evict/readmit
+    scenarios.py  the registry — declarative problem specs (repro.api)
+
+New code should reach this subsystem through :mod:`repro.api` (the
+runtime front door); the constructors below remain public for one release
+as the migration shim.
 """
 from repro.sim.ensemble import EnsembleExecutor, stack_trees
 from repro.sim.farm import (
     SimRequest, SimResult, SimulationFarm, compile_cache_stats,
     reset_compile_cache,
 )
+from repro.sim.scenarios import (
+    ParamSpec, Scenario, UnknownScenarioError, get_scenario,
+    register_scenario, scenario_names, unregister_scenario,
+)
 from repro.sim.service import SimulationService
 
 __all__ = [
-    "EnsembleExecutor", "SimRequest", "SimResult", "SimulationFarm",
-    "SimulationService", "compile_cache_stats", "reset_compile_cache",
-    "stack_trees",
+    "EnsembleExecutor", "ParamSpec", "Scenario", "SimRequest", "SimResult",
+    "SimulationFarm", "SimulationService", "UnknownScenarioError",
+    "compile_cache_stats", "get_scenario", "register_scenario",
+    "reset_compile_cache", "scenario_names", "stack_trees",
+    "unregister_scenario",
 ]

@@ -100,6 +100,12 @@ def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
     vmapped step exchanges ghost zones over them; the result is bitwise
     the serial ``GridDriver`` run of the same decomposition.
     """
+    if solver.config.template == "3DBLOCK":
+        raise NotImplementedError(
+            "the ensemble farm threads per-slot physics as traced scalars, "
+            "which the 3DBLOCK (Pallas) template cannot consume yet — use "
+            "the JNP template for farm runs (Pallas scalar prefetch is a "
+            "ROADMAP item)")
     vstep = jax.vmap(solver._step_local)
 
     def run_k(state, params, k):
@@ -171,6 +177,21 @@ class EnsembleExecutor:
         self._ke = jax.jit(jax.vmap(
             lambda st: 0.5 * sum(jnp.mean(st[f] ** 2)
                                  for f in ("vx", "vy", "vz"))))
+
+        # residual norm between two consecutive states: per-slot
+        # ||u^{n+1} - u^n||_inf / dt over the velocity fields.  Runs OUTSIDE
+        # the compiled ensemble step (on two state snapshots) so enabling
+        # residual-based termination cannot perturb the step's numerics —
+        # under jit on sharded inputs the max reduces globally across
+        # shards without any explicit collective.
+        def _resid(new, old, dt):
+            per_slot = jnp.stack([
+                jnp.max(jnp.abs(new[f] - old[f]),
+                        axis=tuple(range(1, new[f].ndim)))
+                for f in ("vx", "vy", "vz")])
+            return jnp.max(per_slot, axis=0) / jnp.maximum(dt, 1e-30)
+
+        self._resid = jax.jit(_resid)
 
     # -- slot I/O -------------------------------------------------------------
     def state_template(self) -> dict:
@@ -244,3 +265,10 @@ class EnsembleExecutor:
     def kinetic_energy(self) -> np.ndarray:
         """(n_slots,) per-slot kinetic energy (steady-state detection)."""
         return np.asarray(self._ke(self.state))
+
+    def residuals(self, prev_state) -> np.ndarray:
+        """(n_slots,) per-slot ``||u_now - u_prev||_inf / dt`` — the
+        steady-state residual of the resident batch relative to the
+        ``prev_state`` snapshot (normally the state one device step ago)."""
+        return np.asarray(self._resid(self.state, prev_state,
+                                      self._device_params()["dt"]))

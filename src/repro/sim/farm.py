@@ -44,7 +44,7 @@ def static_key(config: CFDConfig, n_slots: int) -> tuple:
     return (
         config.case, config.shape, config.extent, config.jacobi_iters,
         config.jacobi_omega, config.fused_sweeps, config.template,
-        config.overlap, config.decomposition, n_slots,
+        config.interpret, config.overlap, config.decomposition, n_slots,
     )
 
 
@@ -89,15 +89,25 @@ class SimRequest:
 
     The config's static part must match the farm's; its scalar part (nu, dt,
     lid velocity, forcing) is what makes this run *this* run.  ``steps`` is
-    the target device-step count; ``steady_tol`` optionally terminates early
-    once the relative kinetic-energy drift per check interval falls below it.
-    ``init_state``/``step0`` readmit an evicted simulation mid-flight.
+    the target device-step count.  Two early-termination criteria compose
+    (first hit wins): ``residual_tol`` stops once the steady-state residual
+    ``||u^{n+1} - u^n||_inf / dt`` falls below it (the physical criterion);
+    ``steady_tol`` is the legacy relative kinetic-energy-drift heuristic.
+    Both are evaluated on the farm's global ``check_steady_every`` cadence
+    (not per-sim step counts), so a sim admitted off a check boundary may
+    terminate at a different step than a serial run of the same request —
+    admissions into an idle farm are boundary-aligned and match exactly.
+    ``priority`` orders admission: higher levels leave the queue first,
+    FIFO within a level.  ``init_state``/``step0`` readmit an evicted
+    simulation mid-flight.
     """
 
     config: CFDConfig
     steps: int
     tag: str = ""
     steady_tol: float | None = None
+    residual_tol: float | None = None
+    priority: int = 0
     init_state: dict | None = None
     step0: int = 0
     sid: int | None = None   # assigned by the farm
@@ -108,9 +118,10 @@ class SimResult:
     sid: int
     tag: str
     steps_done: int
-    terminated: str          # "steps" | "steady"
+    terminated: str          # "steps" | "steady" | "residual" | "failed"
     state: dict              # host arrays: vx, vy, vz, p (+ masks)
     config: CFDConfig
+    error: str | None = None   # set iff terminated == "failed"
 
 
 class _SlotEntry:
@@ -169,7 +180,7 @@ class SimulationFarm:
             # can never alias a fresh request onto the same handle
             self._next_sid = max(self._next_sid, req.sid + 1)
         self._live.add(req.sid)
-        self.table.submit(req)
+        self.table.submit(req, priority=req.priority)
         return req.sid
 
     def _admit(self):
@@ -181,8 +192,16 @@ class SimulationFarm:
             # replace the queued request with live bookkeeping
             entry = _SlotEntry(req)
             self.table.replace(slot, entry)
-            self.exec.write_slot(slot, params_from_config(req.config),
-                                 state=req.init_state)
+            try:
+                self.exec.write_slot(slot, params_from_config(req.config),
+                                     state=req.init_state)
+            except Exception as e:
+                # a request whose admission raises (bad readmission state,
+                # mis-shaped fields, ...) must fail alone — recorded as a
+                # per-sim failed result — instead of poisoning the farm or
+                # leaving its sid queued/running forever
+                self._fail(slot, entry, e)
+                continue
             if entry.steps_done >= req.steps:
                 # already at (or past) its target: harvest without stepping,
                 # so a steps=0 request never advances the batch
@@ -200,7 +219,7 @@ class SimulationFarm:
         """
         chunk = min(e.req.steps - e.steps_done
                     for _, e in self.table.occupied())
-        if any(e.req.steady_tol is not None
+        if any(e.req.steady_tol is not None or e.req.residual_tol is not None
                for _, e in self.table.occupied()):
             boundary = self.check_steady_every - (
                 self.device_steps % self.check_steady_every)
@@ -212,23 +231,50 @@ class SimulationFarm:
     def step(self, max_chunk: int | None = None) -> int:
         """Admit waiting work, advance the batch one chunk, harvest
         finishers.  Returns the number of device steps taken (0 when the
-        farm is empty)."""
+        farm is empty, or when the chunk failed — the failure is recorded
+        as per-sim "failed" results, never re-raised into the drive loop)."""
         self._admit()
         if self.table.n_active == 0:
             return 0
         chunk = self._chunk_size(max_chunk)
-        self.exec.step_many(chunk)
+        watch_resid = any(e.req.residual_tol is not None
+                          for _, e in self.table.occupied())
+        at_boundary = (self.device_steps + chunk) % self.check_steady_every == 0
+        resid = None
+        try:
+            if watch_resid and at_boundary:
+                # land the final device step alone: the residual
+                # ||u^{n+1} - u^n||_inf compares consecutive states, and
+                # chunk splitting is numerics-neutral (frozen contract)
+                if chunk > 1:
+                    self.exec.step_many(chunk - 1)
+                prev = self.exec.state
+                self.exec.step_many(1)
+                resid = self.exec.residuals(prev)
+            else:
+                self.exec.step_many(chunk)
+        except Exception as e:
+            # the compiled step itself failed (first-trace/compile error):
+            # it is shared by every resident sim, so all of them fail
+            for slot, entry in list(self.table.occupied()):
+                self._fail(slot, entry, e)
+            return 0
         self.device_steps += chunk
         for slot, entry in list(self.table.occupied()):
             entry.steps_done += chunk
             if entry.steps_done >= entry.req.steps:
                 self._finish(slot, entry, "steps")
-        self._check_steady()
+        self._check_steady(resid)
         return chunk
 
-    def _check_steady(self):
+    def _check_steady(self, resid=None):
         if self.device_steps % self.check_steady_every:
             return
+        if resid is not None:
+            for slot, entry in list(self.table.occupied()):
+                tol = entry.req.residual_tol
+                if tol is not None and float(resid[slot]) <= tol:
+                    self._finish(slot, entry, "residual")
         watched = [(s, e) for s, e in self.table.occupied()
                    if e.req.steady_tol is not None]
         if not watched:
@@ -252,6 +298,19 @@ class SimulationFarm:
         self.table.release(slot)
         self.exec.clear_slot(slot)
 
+    def _fail(self, slot: int, entry: _SlotEntry, exc: BaseException):
+        """Record a per-sim failure as a harvestable result and free the
+        slot — a sim whose admission or step raised must surface through
+        poll/result/drain instead of wedging the farm."""
+        req = entry.req
+        self.results[req.sid] = SimResult(
+            sid=req.sid, tag=req.tag, steps_done=entry.steps_done,
+            terminated="failed", state={}, config=req.config,
+            error=f"{type(exc).__name__}: {exc}")
+        self._live.discard(req.sid)
+        self.table.release(slot)
+        self.exec.clear_slot(slot)
+
     def run(self, max_device_steps: int, until=None) -> int:
         """Step until the budget, the farm drains, or ``until()`` is true.
 
@@ -261,9 +320,15 @@ class SimulationFarm:
         taken = 0
         while taken < max_device_steps and not (until is not None and until()):
             t = self.step(max_chunk=max_device_steps - taken)
-            if not t:
-                break
             taken += t
+            if not t:
+                if self.table.n_active == 0 and self.table.n_queued:
+                    # a zero-step round with work still queued means the
+                    # resident batch just failed out: keep admitting so
+                    # every queued sim resolves (possibly also to "failed")
+                    # instead of parking in the queue forever
+                    continue
+                break
         return taken
 
     def run_until_drained(self, max_device_steps: int = 100_000

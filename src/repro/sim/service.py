@@ -47,10 +47,16 @@ class SimulationService:
 
     # -- status ---------------------------------------------------------------
     def poll(self, sid: int) -> dict:
-        """{"status": queued|running|evicted|done, "steps_done": int}."""
+        """{"status": queued|running|evicted|done|failed, "steps_done": int}.
+
+        A failed simulation (admission or compiled step raised) reports
+        ``status="failed"`` with the captured ``error`` string."""
         if sid in self.farm.results:
-            return {"status": "done",
-                    "steps_done": self.farm.results[sid].steps_done}
+            res = self.farm.results[sid]
+            if res.terminated == "failed":
+                return {"status": "failed", "steps_done": res.steps_done,
+                        "error": res.error}
+            return {"status": "done", "steps_done": res.steps_done}
         if sid in self._evicted:
             return {"status": "evicted",
                     "steps_done": self._evicted[sid].steps_done}
@@ -80,7 +86,12 @@ class SimulationService:
         if sid not in self.farm.results:
             raise KeyError(f"simulation {sid} has not finished "
                            f"(status: {self.poll(sid)['status']})")
-        return self.farm.results[sid]
+        res = self.farm.results[sid]
+        if res.terminated == "failed":
+            raise RuntimeError(
+                f"simulation {sid} ({res.tag or 'untagged'}) failed after "
+                f"{res.steps_done} steps: {res.error}")
+        return res
 
     # -- eviction / readmission ------------------------------------------------
     def evict(self, sid: int) -> bool:
@@ -127,7 +138,14 @@ class SimulationService:
         return True
 
     def drain(self, max_device_steps: int = 100_000) -> dict[int, SimResult]:
-        """Readmit everything evicted, then run the farm dry."""
+        """Readmit everything evicted, then run the farm dry.
+
+        Always terminates with every submitted sid resolved: a sim whose
+        slot config raises at admission or compile time is returned as a
+        ``terminated="failed"`` result (with the error string) instead of
+        wedging the drive loop — callers inspect ``result.terminated``
+        rather than waiting on a sim that can never finish.
+        """
         for sid in list(self._evicted):
             self.readmit(sid)
         return self.farm.run_until_drained(max_device_steps)

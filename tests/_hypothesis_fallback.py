@@ -40,11 +40,51 @@ def floats(min_value=0.0, max_value=1.0, **_kw):
     return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
 
+def tuples(*strats):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [elements.draw(rng)
+                                  for _ in range(rng.randint(min_size,
+                                                             max_size))])
+
+
+def sets(elements, min_size=0, max_size=10):
+    def draw(rng):
+        want = rng.randint(min_size, max_size)
+        out = set()
+        for _ in range(max(want, 1) * 20):   # bounded retries on duplicates
+            if len(out) >= want:
+                break
+            out.add(elements.draw(rng))
+        if len(out) < min_size:
+            # never silently weaken a min_size contract: real hypothesis
+            # would keep searching or error; a fallback must not pass a
+            # property it could not actually draw
+            raise ValueError(
+                f"sets(min_size={min_size}) could not draw enough distinct "
+                f"elements (got {len(out)}) — element domain too small?")
+        return out
+
+    return _Strategy(draw)
+
+
+def builds(fn, *strats, **kwstrats):
+    return _Strategy(lambda rng: fn(
+        *(s.draw(rng) for s in strats),
+        **{k: s.draw(rng) for k, s in kwstrats.items()}))
+
+
 strategies = types.SimpleNamespace(
     sampled_from=sampled_from,
     integers=integers,
     booleans=booleans,
     floats=floats,
+    tuples=tuples,
+    lists=lists,
+    sets=sets,
+    builds=builds,
 )
 
 

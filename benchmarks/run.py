@@ -1,7 +1,20 @@
 """Benchmark harness: one bench per paper table/figure + the roofline
-deliverable.
+deliverable — every result lands in the ``BENCH_*.json`` trajectory.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only cavity,...]
+                                           [--smoke] [--out-dir DIR]
+
+Each bench's result is written as ``BENCH_<name>.json`` in the fixed
+``repro.bench.v1`` envelope (see :mod:`repro.obs.bench`): schema version,
+bench name, creation time, host fingerprint, pass verdict, wall time, and
+the bench's numbers under ``metrics``.  Every file is schema-validated
+before it is written, so a malformed entry can never enter the
+trajectory.
+
+``--smoke`` runs a seconds-scale telemetry-enabled ensemble pass instead
+of the full suite and emits ``BENCH_smoke.json`` — the CI fast lane runs
+it on every push and archives the artifact, which is what keeps the
+trajectory populated (and the schema honest) between real-hardware runs.
 """
 from __future__ import annotations
 
@@ -13,13 +26,71 @@ import time
 BENCHES = ["stencil", "cavity", "ensemble", "scaling", "roofline", "dist"]
 
 
+def run_smoke(out_dir: str) -> dict:
+    """Telemetry-on mini ensemble: the first entry of any trajectory.
+
+    Small enough for CI (seconds on one CPU), but it exercises the whole
+    instrumented stack: front door -> farm -> ensemble step with timers,
+    metrics, and per-sim traces — and its BENCH document carries the
+    telemetry snapshot, so the artifact doubles as an observability
+    regression record.
+    """
+    from repro import api, obs
+
+    n, steps, slots = 12, 16, 2
+    reynolds = (60.0, 140.0, 260.0, 380.0)
+    rt = api.runtime(n=n, n_slots=slots, jacobi_iters=8, telemetry=True)
+    t0 = time.perf_counter()
+    sids = [rt.submit("cavity", re=re, steps=steps, tag=f"re{re:.0f}")
+            for re in reynolds]
+    out = rt.drain()
+    wall = time.perf_counter() - t0
+    done = [out[s].steps_done == steps and out[s].terminated == "steps"
+            for s in sids]
+    traced = [rt.telemetry.trace.kinds_for(s) for s in sids]
+    lifecycle_ok = all(
+        ("submit" in k and "admit" in k and "result" in k) for k in traced)
+    obs.validate_chrome_trace(rt.telemetry.trace.to_chrome())
+    doc = obs.make_bench_doc(
+        "smoke",
+        {
+            "grid": f"{n}x{n}x4",
+            "ensemble": len(reynolds),
+            "slots": slots,
+            "steps_per_sim": steps,
+            "sim_steps_per_s": round(len(reynolds) * steps / wall, 1),
+            "device_steps": rt.device_steps(),
+            "compile_cache": api.compile_cache_stats(),
+            "telemetry": rt.telemetry.snapshot(),
+        },
+        passed=all(done) and lifecycle_ok,
+        wall_s=round(wall, 3),
+    )
+    path = obs.write_bench(doc, out_dir)
+    obs.load_bench(path)   # round-trip: the artifact on disk validates
+    print(f"[benchmarks] smoke -> {path} "
+          f"(passed={doc['passed']}, {doc['wall_s']}s)")
+    print(rt.report())
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale telemetry bench -> BENCH_smoke.json")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_*.json artifacts land")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else BENCHES
 
+    if args.smoke:
+        doc = run_smoke(args.out_dir)
+        sys.exit(0 if doc["passed"] else 1)
+
+    from repro import obs
+
+    names = args.only.split(",") if args.only else BENCHES
     results = []
     for name in names:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
@@ -30,8 +101,15 @@ def main():
             res["wall_s"] = res.get("wall_s", round(time.time() - t0, 1))
         except Exception as e:  # pragma: no cover
             res = {"bench": name, "passed": False,
-                   "error": f"{type(e).__name__}: {e}"}
+                   "error": f"{type(e).__name__}: {e}",
+                   "wall_s": round(time.time() - t0, 1)}
         print(json.dumps(res, indent=1, default=str), flush=True)
+        doc = obs.make_bench_doc(
+            name, {k: v for k, v in res.items()
+                   if k not in ("passed", "wall_s")},
+            passed=bool(res.get("passed")), wall_s=res["wall_s"])
+        path = obs.write_bench(doc, args.out_dir)
+        print(f"[benchmarks] wrote {path}", flush=True)
         results.append(res)
 
     n_pass = sum(1 for r in results if r.get("passed"))

@@ -7,6 +7,12 @@ through the runtime front door, drain, and compare the centerline profiles
 ``submit``/``result``; nothing here constructs a farm.
 
 Run:  PYTHONPATH=src python examples/ensemble_sweep.py [--n 24] [--slots 4]
+          [--trace-out events.jsonl] [--report]
+
+``--trace-out`` enables telemetry and streams every per-sim lifecycle
+event (submit -> admit -> first_step -> result) to a JSON-lines file; a
+Chrome-trace twin (``<path>.chrome.json``) is written alongside for
+Perfetto.  ``--report`` prints the Cactus-style timer/metrics summary.
 """
 import argparse
 import time
@@ -17,14 +23,20 @@ def main():
     ap.add_argument("--n", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--t-end", type=float, default=4.0)
+    ap.add_argument("--trace-out", default=None,
+                    help="stream lifecycle events here as JSON-lines")
+    ap.add_argument("--report", action="store_true",
+                    help="print the repro.obs timer/metrics report")
     args = ap.parse_args()
 
     import numpy as np
 
     from repro import api
 
+    telemetry = ({"trace_path": args.trace_out} if args.trace_out
+                 else bool(args.report))
     reynolds = [50, 75, 100, 150, 200, 250, 300, 400]
-    rt = api.runtime(n=args.n, n_slots=args.slots)
+    rt = api.runtime(n=args.n, n_slots=args.slots, telemetry=telemetry)
     print(f"cavity sweep: {len(reynolds)} Reynolds numbers through "
           f"{args.slots} slots on a {args.n}^2 grid")
 
@@ -40,6 +52,14 @@ def main():
           f"({total_steps / dt:.0f} steps/s), "
           f"{rt.device_steps()} device dispatch rounds")
     print(f"compile cache: {api.compile_cache_stats()}")
+
+    if args.report or args.trace_out:
+        print(rt.report())
+    if args.trace_out:
+        chrome = rt.telemetry.trace.save_chrome(
+            args.trace_out + ".chrome.json")
+        print(f"trace: {len(rt.telemetry.trace.events)} events -> "
+              f"{args.trace_out} (+ {chrome} for Perfetto)")
 
     print("\n  Re    min u(y)   max u(y)   (centerline, z-averaged)")
     u_max = []

@@ -29,6 +29,7 @@ from typing import Any, Callable, Mapping
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.cfd.ns3d import CFDConfig, NavierStokes3D
 from repro.core.schedule import Schedule
 from repro.sim.ensemble import plan_decomposition
@@ -101,6 +102,10 @@ class RuntimeConfig:
     ckpt_dir: str | None = None          # eviction spill directory
     check_every: int = 16                # convergence-check interval
     solver: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # observability: False (default, bitwise-invisible), True, a
+    # repro.obs.TelemetryConfig / Telemetry, or a TelemetryConfig kwargs
+    # dict ({"trace_path": ...}); see repro.obs.resolve
+    telemetry: Any = False
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -171,6 +176,11 @@ class Runtime:
     def __init__(self, config: RuntimeConfig | None = None,
                  mesh: jax.sharding.Mesh | None = None):
         self.config = config if config is not None else RuntimeConfig()
+        # one telemetry handle per runtime: every service/farm this
+        # runtime resolves reports into it (scoped compile-cache stats,
+        # farm metrics, per-sim traces); NULL when disabled, making every
+        # hook a no-op on the default path
+        self.telemetry = obs.resolve(self.config.telemetry)
         self._mesh = mesh                  # explicit mesh wins over shape
         self._mesh_built = mesh is not None
         self._services: dict[tuple, SimulationService] = {}
@@ -225,8 +235,9 @@ class Runtime:
             self.config.slot_axis in self.mesh.axis_names else None)
         solver = NavierStokes3D(solver_cfg, self.mesh if active else None)
         sched = sc.schedule(solver, ic=ic_kw)
-        state = sched.compile_bin("INITIAL")({})
-        step = sched.compile_bin("EVOLVE")
+        tel = self.telemetry if self.telemetry.enabled else None
+        state = sched.compile_bin("INITIAL", telemetry=tel)({})
+        step = sched.compile_bin("EVOLVE", telemetry=tel)
         return PreparedRun(scenario=sc, solver=solver, schedule=sched,
                            state=state, step=step, config=cfg)
 
@@ -255,30 +266,34 @@ class Runtime:
         check = max(int(self.config.check_every), 1)
         state, terminated, done = pr.state, "steps", 0
         ke_prev: float | None = None
-        for i in range(steps):
-            # snapshot only when this step lands on a residual check
-            # boundary — an unconditional snapshot would pin a second
-            # full field state for the whole run
-            prev = state if (residual_tol is not None
-                             and (i + 1) % check == 0) else None
-            state = pr.step(state)
-            done = i + 1
-            if progress and (done % progress == 0):
-                print(f"  step {done:6d}/{steps} t={done * cfg.dt:8.3f} "
-                      f"KE={pr.solver.kinetic_energy(state):.6f}")
-            if residual_tol is not None and done % check == 0:
-                resid = float(_residual_norm_jit(state, prev,
-                                                 jnp.float32(cfg.dt)))
-                if resid <= residual_tol:
-                    terminated = "residual"
-                    break
-            if steady_tol is not None and done % check == 0:
-                ke = pr.solver.kinetic_energy(state)
-                if ke_prev is not None and \
-                        abs(ke - ke_prev) <= steady_tol * max(abs(ke), 1e-12):
-                    terminated = "steady"
-                    break
-                ke_prev = ke
+        with self.telemetry.section(f"run.{pr.scenario.name}"):
+            for i in range(steps):
+                # snapshot only when this step lands on a residual check
+                # boundary — an unconditional snapshot would pin a second
+                # full field state for the whole run
+                prev = state if (residual_tol is not None
+                                 and (i + 1) % check == 0) else None
+                state = pr.step(state)
+                done = i + 1
+                if progress and (done % progress == 0):
+                    print(f"  step {done:6d}/{steps} "
+                          f"t={done * cfg.dt:8.3f} "
+                          f"KE={pr.solver.kinetic_energy(state):.6f}")
+                if residual_tol is not None and done % check == 0:
+                    resid = float(_residual_norm_jit(state, prev,
+                                                     jnp.float32(cfg.dt)))
+                    if resid <= residual_tol:
+                        terminated = "residual"
+                        break
+                if steady_tol is not None and done % check == 0:
+                    ke = pr.solver.kinetic_energy(state)
+                    if ke_prev is not None and abs(ke - ke_prev) <= \
+                            steady_tol * max(abs(ke), 1e-12):
+                        terminated = "steady"
+                        break
+                    ke_prev = ke
+        if self.telemetry.enabled:
+            self.telemetry.metrics.inc("sim.steps_total", done)
         diagnostics = pr.analyze(state, done)
         return RunResult(scenario=pr.scenario.name,
                          state=jax.device_get(state), steps_done=done,
@@ -301,7 +316,9 @@ class Runtime:
             svc = SimulationService(
                 cfg, n_slots=self.config.n_slots, ckpt_dir=ckpt,
                 check_steady_every=self.config.check_every,
-                mesh=self.mesh, slot_axis=self.config.slot_axis)
+                mesh=self.mesh, slot_axis=self.config.slot_axis,
+                telemetry=self.telemetry,
+                farm_id=f"{cfg.case}/sig{len(self._services):03d}")
         except Exception as e:
             return None, f"{type(e).__name__}: {e}"
         self._services[key] = svc
@@ -416,18 +433,23 @@ class Runtime:
     def services(self) -> tuple[SimulationService, ...]:
         return tuple(self._services.values())
 
+    def report(self) -> str:
+        """This runtime's ``repro.obs.report()`` (timers + metrics)."""
+        return obs.report(self.telemetry)
+
 
 def runtime(n: int = 32, *, backend: str = "jnp", mesh_shape: tuple = (),
             mesh_axes: tuple = (), decomposition: tuple = (),
             slot_axis: str = "slot", n_slots: int = 4,
             ckpt_dir: str | None = None, check_every: int = 16,
             nz: int | None = None, mesh: jax.sharding.Mesh | None = None,
-            **solver) -> Runtime:
+            telemetry: Any = False, **solver) -> Runtime:
     """Build a :class:`Runtime` — the one-call front door.
 
-    >>> rt = repro.api.runtime(n=32)
+    >>> rt = repro.api.runtime(n=32, telemetry=True)
     >>> res = rt.run("cavity", t_end=5.0, re=100.0)
     >>> res.diagnostics["ghia"]
+    >>> print(rt.report())        # Cactus-style timers + farm metrics
     """
     cfg = RuntimeConfig(n=n, nz=nz, backend=backend,
                         mesh_shape=tuple(mesh_shape),
@@ -435,5 +457,5 @@ def runtime(n: int = 32, *, backend: str = "jnp", mesh_shape: tuple = (),
                         decomposition=tuple(decomposition),
                         slot_axis=slot_axis, n_slots=n_slots,
                         ckpt_dir=ckpt_dir, check_every=check_every,
-                        solver=dict(solver))
+                        solver=dict(solver), telemetry=telemetry)
     return Runtime(cfg, mesh=mesh)

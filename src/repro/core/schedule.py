@@ -96,16 +96,42 @@ class Schedule:
         by_name = {e.name: e for e in entries}
         return [by_name[n] for n in order]
 
-    def compile_bin(self, bin: str) -> Callable[[State], State]:
-        """Compose the bin's routines (topologically sorted) into one fn."""
+    def compile_bin(self, bin: str,
+                    telemetry=None) -> Callable[[State], State]:
+        """Compose the bin's routines (topologically sorted) into one fn.
+
+        With an *enabled* :class:`repro.obs.Telemetry`, the composed
+        runner is the Cactus-instrumented one: the bin and each routine
+        get hierarchical wall-clock timer sections (fenced with
+        ``block_until_ready`` so async dispatch is charged to the routine
+        that issued it) plus ``jax.named_scope`` annotations so bins show
+        up in XLA profiles.  Telemetry ``None``/disabled returns exactly
+        the uninstrumented composition — the zero-telemetry path has no
+        fences, no clocks, and identical numerics.
+        """
         entries = self._sorted(bin)
 
+        if telemetry is None or not telemetry.enabled:
+            def run(state: State) -> State:
+                for e in entries:
+                    state = e.fn(state)
+                return state
+
+            run.__name__ = f"schedule_{bin}"
+            return run
+
+        tel, bname = telemetry, canonical_bin(bin)
+
         def run(state: State) -> State:
-            for e in entries:
-                state = e.fn(state)
+            with tel.section(f"schedule.{bname}"):
+                for e in entries:
+                    with tel.section(e.name), \
+                            tel.named_scope(f"{bname}.{e.name}"):
+                        state = e.fn(state)
+                        tel.fence(state)
             return state
 
-        run.__name__ = f"schedule_{bin}"
+        run.__name__ = f"schedule_{bname}"
         return run
 
     def names(self, bin: str) -> list[str]:

@@ -94,6 +94,12 @@ class SlotTable:
     def n_queued(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def queue_depths(self) -> dict[int, int]:
+        """Waiting-item count per priority level.  Every level that ever
+        held work is reported (emptied levels at 0), so a gauge fed from
+        this view decays to zero instead of freezing at the last depth."""
+        return {p: len(q) for p, q in self._queues.items()}
+
     @property
     def idle(self) -> bool:
         """Nothing resident and nothing waiting."""

@@ -142,7 +142,10 @@ class EnsembleExecutor:
 
     def __init__(self, config: CFDConfig, n_slots: int,
                  solver: NavierStokes3D | None = None, run_k=None,
-                 mesh=None, slot_axis: str = "data"):
+                 mesh=None, slot_axis: str = "data", telemetry=None):
+        from repro import obs
+
+        self.tel = obs.resolve(telemetry)
         solver_cfg, decomp = plan_decomposition(config, mesh,
                                                 slot_axis=slot_axis)
         self.config = config
@@ -227,17 +230,20 @@ class EnsembleExecutor:
                  if sh is not None else jnp.asarray)
         src = self._fresh if state is None else {
             k: place(v) for k, v in state.items()}
-        self.state = jax.tree_util.tree_map(
-            lambda full, one: lax.dynamic_update_index_in_dim(
-                full, one.astype(full.dtype), slot, 0),
-            self.state, dict(src))
+        with self.tel.section("ensemble.write_slot"):
+            self.state = jax.tree_util.tree_map(
+                lambda full, one: lax.dynamic_update_index_in_dim(
+                    full, one.astype(full.dtype), slot, 0),
+                self.state, dict(src))
+            self.tel.fence(self.state)
         for k in PARAM_KEYS:
             self.params[k][slot] = np.float32(params[k])
         self._params_dev = None
 
     def read_slot(self, slot: int) -> dict:
         """Host copy of one simulation's fields."""
-        return {k: np.asarray(v[slot]) for k, v in self.state.items()}
+        with self.tel.section("ensemble.read_slot"):
+            return {k: np.asarray(v[slot]) for k, v in self.state.items()}
 
     def clear_slot(self, slot: int):
         """Park a freed slot on benign parameters (finite garbage compute)."""

@@ -18,10 +18,12 @@ already-seen shape reuses the executable (hit/miss counters exposed via
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
 
+from repro import obs
 from repro.cfd.ns3d import CFDConfig, NavierStokes3D, params_from_config
 from repro.serve.slots import SlotTable
 from repro.sim.ensemble import (
@@ -30,8 +32,22 @@ from repro.sim.ensemble import (
 
 
 # -- compile cache -----------------------------------------------------------
+# The executable cache stays process-wide on purpose (a restarted farm of a
+# seen shape reuses the compiled step); the hit/miss COUNTERS are metrics:
+# each farm scopes them to its own telemetry registry, so back-to-back
+# runtimes no longer report each other's hits.  ``_FACADE_METRICS`` backs
+# the legacy module-level ``compile_cache_stats()`` facade, which keeps its
+# process-global semantics for compatibility.
 _STEP_CACHE: dict[tuple, tuple[NavierStokes3D, Any]] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_FACADE_METRICS = obs.Registry()
+
+CACHE_METRIC = "farm.compile_cache"
+
+
+def _count_cache(result: str, metrics=None):
+    _FACADE_METRICS.inc(CACHE_METRIC, result=result)
+    if metrics is not None and metrics is not _FACADE_METRICS:
+        metrics.inc(CACHE_METRIC, result=result)
 
 
 def static_key(config: CFDConfig, n_slots: int) -> tuple:
@@ -49,7 +65,7 @@ def static_key(config: CFDConfig, n_slots: int) -> tuple:
 
 
 def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
-                           slot_axis: str = "data"):
+                           slot_axis: str = "data", metrics=None):
     """(solver, jitted chunked ensemble step) for the static signature.
 
     ``mesh`` extends the signature (a Mesh is hashable): multi-device
@@ -58,13 +74,17 @@ def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
     farm mesh so each slot's grid decomposes over the named axes (the
     slots × shards path); a mesh whose decomposed axes all have extent 1
     degrades to the plain slot-parallel executable.
+
+    ``metrics`` (an :class:`repro.obs.Registry`) additionally receives
+    the ``farm.compile_cache{result=hit|miss}`` counters, scoping cache
+    stats to the caller's telemetry instead of only the process facade.
     """
     key = static_key(config, n_slots) + (mesh, slot_axis if mesh else None)
     hit = _STEP_CACHE.get(key)
     if hit is not None:
-        _CACHE_STATS["hits"] += 1
+        _count_cache("hit", metrics)
         return hit
-    _CACHE_STATS["misses"] += 1
+    _count_cache("miss", metrics)
     solver_cfg, decomp = plan_decomposition(
         config, mesh, slot_axis=slot_axis if mesh is not None else None)
     solver = NavierStokes3D(solver_cfg, mesh if decomp else None)
@@ -73,13 +93,18 @@ def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
     return _STEP_CACHE[key]
 
 
-def compile_cache_stats() -> dict:
-    return dict(_CACHE_STATS, entries=len(_STEP_CACHE))
+def compile_cache_stats(metrics=None) -> dict:
+    """Hit/miss/entry counts — process-wide by default (the legacy
+    facade), or scoped to a telemetry registry when one is passed."""
+    reg = metrics if metrics is not None else _FACADE_METRICS
+    return {"hits": reg.get(CACHE_METRIC, result="hit") or 0,
+            "misses": reg.get(CACHE_METRIC, result="miss") or 0,
+            "entries": len(_STEP_CACHE)}
 
 
 def reset_compile_cache():
     _STEP_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
+    _FACADE_METRICS.reset()
 
 
 # -- requests / results ------------------------------------------------------
@@ -127,34 +152,59 @@ class SimResult:
 class _SlotEntry:
     """Host bookkeeping for one resident simulation."""
 
-    __slots__ = ("req", "steps_done", "ke_prev")
+    __slots__ = ("req", "steps_done", "ke_prev", "started")
 
     def __init__(self, req: SimRequest):
         self.req = req
         self.steps_done = req.step0
         self.ke_prev: float | None = None
+        self.started = False           # first step-chunk already traced?
 
 
 class SimulationFarm:
-    """Queue + slots + termination around one compiled ensemble step."""
+    """Queue + slots + termination around one compiled ensemble step.
+
+    ``telemetry`` (any :func:`repro.obs.resolve` spec) instruments the
+    farm: hierarchical timers around the admit / step-chunk / harvest
+    phases, ``farm.*`` / ``sim.*`` metrics, and per-sim lifecycle trace
+    events.  Disabled (the default) every hook is a no-op — results are
+    bitwise those of an uninstrumented farm, with no extra device syncs.
+    ``farm_id`` tags this farm's trace events when several farms share
+    one telemetry handle (the Runtime's one-service-per-signature case).
+    """
 
     def __init__(self, base_config: CFDConfig, n_slots: int = 8,
                  check_steady_every: int = 16, mesh=None,
-                 slot_axis: str = "data"):
+                 slot_axis: str = "data", telemetry=None,
+                 farm_id: str | None = None):
         self.base_config = base_config
         self.n_slots = n_slots
         self.check_steady_every = check_steady_every
+        self.tel = obs.resolve(telemetry)
+        self.farm_id = farm_id if farm_id is not None else base_config.case
         solver, run_k = compiled_ensemble_step(base_config, n_slots,
                                                mesh=mesh,
-                                               slot_axis=slot_axis)
+                                               slot_axis=slot_axis,
+                                               metrics=self.tel.metrics)
         self.exec = EnsembleExecutor(base_config, n_slots,
                                      solver=solver, run_k=run_k, mesh=mesh,
-                                     slot_axis=slot_axis)
+                                     slot_axis=slot_axis,
+                                     telemetry=self.tel)
         self.table = SlotTable(n_slots)
         self.results: dict[int, SimResult] = {}
         self.device_steps = 0
         self._next_sid = 0
         self._live: set[int] = set()   # queued or resident sids
+        self._submit_ts: dict[int, float] = {}   # sid -> submit wall time
+        self.heartbeat = None          # service-installed: fn(chunk_wall_s)
+
+    def _gauge_load(self):
+        """Refresh the occupancy/queue-depth gauges (telemetry only)."""
+        if not self.tel.enabled:
+            return
+        self.tel.metrics.set("farm.slot_occupancy", self.table.n_active)
+        for prio, depth in self.table.queue_depths().items():
+            self.tel.metrics.set("farm.queue_depth", depth, priority=prio)
 
     # -- intake ---------------------------------------------------------------
     def submit(self, req: SimRequest) -> int:
@@ -181,31 +231,46 @@ class SimulationFarm:
             self._next_sid = max(self._next_sid, req.sid + 1)
         self._live.add(req.sid)
         self.table.submit(req, priority=req.priority)
+        if self.tel.enabled:
+            self._submit_ts.setdefault(req.sid, time.perf_counter())
+            kind = "submit" if req.step0 == 0 else "readmit_submit"
+            self.tel.trace.emit(
+                kind, sid=req.sid, farm=self.farm_id, tag=req.tag,
+                priority=req.priority, steps=req.steps, step0=req.step0,
+                signature=str(static_key(req.config, self.n_slots)))
+            self._gauge_load()
         return req.sid
 
     def _admit(self):
-        while True:
-            admitted = self.table.admit_next()
-            if admitted is None:
-                return
-            slot, req = admitted
-            # replace the queued request with live bookkeeping
-            entry = _SlotEntry(req)
-            self.table.replace(slot, entry)
-            try:
-                self.exec.write_slot(slot, params_from_config(req.config),
-                                     state=req.init_state)
-            except Exception as e:
-                # a request whose admission raises (bad readmission state,
-                # mis-shaped fields, ...) must fail alone — recorded as a
-                # per-sim failed result — instead of poisoning the farm or
-                # leaving its sid queued/running forever
-                self._fail(slot, entry, e)
-                continue
-            if entry.steps_done >= req.steps:
-                # already at (or past) its target: harvest without stepping,
-                # so a steps=0 request never advances the batch
-                self._finish(slot, entry, "steps")
+        with self.tel.section("farm.admit"):
+            while True:
+                admitted = self.table.admit_next()
+                if admitted is None:
+                    break
+                slot, req = admitted
+                # replace the queued request with live bookkeeping
+                entry = _SlotEntry(req)
+                self.table.replace(slot, entry)
+                self.tel.trace.emit("admit", sid=req.sid, farm=self.farm_id,
+                                    slot=slot, step0=req.step0, tag=req.tag)
+                try:
+                    self.exec.write_slot(slot,
+                                         params_from_config(req.config),
+                                         state=req.init_state)
+                except Exception as e:
+                    # a request whose admission raises (bad readmission
+                    # state, mis-shaped fields, ...) must fail alone —
+                    # recorded as a per-sim failed result — instead of
+                    # poisoning the farm or leaving its sid queued/running
+                    # forever
+                    self._fail(slot, entry, e)
+                    continue
+                if entry.steps_done >= req.steps:
+                    # already at (or past) its target: harvest without
+                    # stepping, so a steps=0 request never advances the
+                    # batch
+                    self._finish(slot, entry, "steps")
+            self._gauge_load()
 
     # -- stepping -------------------------------------------------------------
     def _chunk_size(self, max_chunk: int | None) -> int:
@@ -241,24 +306,43 @@ class SimulationFarm:
                           for _, e in self.table.occupied())
         at_boundary = (self.device_steps + chunk) % self.check_steady_every == 0
         resid = None
+        want_wall = self.tel.enabled or self.heartbeat is not None
+        t_chunk = time.perf_counter() if want_wall else 0.0
         try:
-            if watch_resid and at_boundary:
-                # land the final device step alone: the residual
-                # ||u^{n+1} - u^n||_inf compares consecutive states, and
-                # chunk splitting is numerics-neutral (frozen contract)
-                if chunk > 1:
-                    self.exec.step_many(chunk - 1)
-                prev = self.exec.state
-                self.exec.step_many(1)
-                resid = self.exec.residuals(prev)
-            else:
-                self.exec.step_many(chunk)
+            with self.tel.section("farm.step_chunk"):
+                if watch_resid and at_boundary:
+                    # land the final device step alone: the residual
+                    # ||u^{n+1} - u^n||_inf compares consecutive states, and
+                    # chunk splitting is numerics-neutral (frozen contract)
+                    if chunk > 1:
+                        self.exec.step_many(chunk - 1)
+                    prev = self.exec.state
+                    self.exec.step_many(1)
+                    resid = self.exec.residuals(prev)
+                else:
+                    self.exec.step_many(chunk)
+                # the fence exists only behind enabled telemetry: it makes
+                # the section's clock (and the watchdog's view) cover the
+                # dispatched device work, never the default path
+                self.tel.fence(self.exec.state)
         except Exception as e:
             # the compiled step itself failed (first-trace/compile error):
             # it is shared by every resident sim, so all of them fail
             for slot, entry in list(self.table.occupied()):
                 self._fail(slot, entry, e)
             return 0
+        if self.tel.enabled:
+            self.tel.metrics.inc("sim.steps_total",
+                                 chunk * self.table.n_active)
+            for _, entry in self.table.occupied():
+                if not entry.started:
+                    entry.started = True
+                    self.tel.trace.emit("first_step", sid=entry.req.sid,
+                                        farm=self.farm_id,
+                                        device_step=self.device_steps)
+        if self.heartbeat is not None:
+            # service watchdog hook: chunk wall time + liveness beat
+            self.heartbeat(time.perf_counter() - t_chunk)
         self.device_steps += chunk
         for slot, entry in list(self.table.occupied()):
             entry.steps_done += chunk
@@ -290,26 +374,50 @@ class SimulationFarm:
 
     def _finish(self, slot: int, entry: _SlotEntry, reason: str):
         req = entry.req
+        with self.tel.section("farm.harvest"):
+            state = self.exec.read_slot(slot)
+            self.tel.fence(state)
         self.results[req.sid] = SimResult(
             sid=req.sid, tag=req.tag, steps_done=entry.steps_done,
-            terminated=reason, state=self.exec.read_slot(slot),
-            config=req.config)
+            terminated=reason, state=state, config=req.config)
         self._live.discard(req.sid)
         self.table.release(slot)
         self.exec.clear_slot(slot)
+        self._resolved(req, entry.steps_done, reason)
 
     def _fail(self, slot: int, entry: _SlotEntry, exc: BaseException):
         """Record a per-sim failure as a harvestable result and free the
         slot — a sim whose admission or step raised must surface through
         poll/result/drain instead of wedging the farm."""
         req = entry.req
+        err = f"{type(exc).__name__}: {exc}"
         self.results[req.sid] = SimResult(
             sid=req.sid, tag=req.tag, steps_done=entry.steps_done,
-            terminated="failed", state={}, config=req.config,
-            error=f"{type(exc).__name__}: {exc}")
+            terminated="failed", state={}, config=req.config, error=err)
         self._live.discard(req.sid)
         self.table.release(slot)
         self.exec.clear_slot(slot)
+        self._resolved(req, entry.steps_done, "failed", error=err)
+
+    def _resolved(self, req: SimRequest, steps_done: int, reason: str,
+                  error: str | None = None):
+        """Telemetry for a sid leaving the farm (finished or failed)."""
+        if not self.tel.enabled:
+            return
+        if reason in ("steady", "residual"):
+            self.tel.trace.emit("steady", sid=req.sid, farm=self.farm_id,
+                                criterion=reason, steps_done=steps_done)
+        extra = {"error": error} if error else {}
+        self.tel.trace.emit("result", sid=req.sid, farm=self.farm_id,
+                            terminated=reason, steps_done=steps_done,
+                            tag=req.tag, **extra)
+        self.tel.metrics.inc("sim.results", terminated=reason)
+        t0 = self._submit_ts.pop(req.sid, None)
+        if t0 is not None:
+            self.tel.metrics.observe("service.submit_to_result_seconds",
+                                     time.perf_counter() - t0,
+                                     priority=req.priority)
+        self._gauge_load()
 
     def run(self, max_device_steps: int, until=None) -> int:
         """Step until the budget, the farm drains, or ``until()`` is true.
@@ -347,10 +455,18 @@ class SimulationFarm:
         """
         for slot, entry in self.table.occupied():
             if entry.req.sid == sid:
-                state = self.exec.read_slot(slot)
+                with self.tel.section("farm.evict"):
+                    state = self.exec.read_slot(slot)
+                    self.tel.fence(state)
                 self._live.discard(sid)
                 self.table.release(slot)
                 self.exec.clear_slot(slot)
+                if self.tel.enabled:
+                    self.tel.metrics.inc("sim.evictions")
+                    self.tel.trace.emit("evict", sid=sid, farm=self.farm_id,
+                                        slot=slot,
+                                        steps_done=entry.steps_done)
+                    self._gauge_load()
                 return entry.req, state, entry.steps_done
         return None
 

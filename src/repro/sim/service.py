@@ -8,16 +8,27 @@ configured, reusing its atomic-rename layout) so the slot serves other
 traffic — and later *readmitted* to continue exactly where they stopped:
 the saved fields re-enter a slot bit-identically, so an evicted+readmitted
 run equals an uninterrupted one.
+
+With telemetry enabled the service also runs the :mod:`repro.ft.watchdog`
+machinery: every poll and every farm step-chunk is a *heartbeat* (touching
+the ``heartbeat_path`` liveness file for an external orchestrator, when
+configured), a gap between consecutive beats longer than the configured
+deadline counts a ``service.watchdog_stalls`` metric + trace event, and a
+:class:`~repro.ft.watchdog.StepWatchdog` EWMA over chunk wall-times flags
+slow/hung chunks (``service.watchdog_events{kind}``).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import numpy as np
 
+from repro import obs
 from repro.cfd.ns3d import CFDConfig
 from repro.ckpt.checkpointer import Checkpointer
+from repro.ft.watchdog import Heartbeat, StepWatchdog
 from repro.sim.farm import SimRequest, SimResult, SimulationFarm
 
 
@@ -33,13 +44,54 @@ class SimulationService:
 
     def __init__(self, base_config: CFDConfig, n_slots: int = 8,
                  ckpt_dir: str | None = None, check_steady_every: int = 16,
-                 mesh=None, slot_axis: str = "data"):
+                 mesh=None, slot_axis: str = "data", telemetry=None,
+                 farm_id: str | None = None):
+        self.tel = obs.resolve(telemetry)
         self.farm = SimulationFarm(base_config, n_slots,
                                    check_steady_every=check_steady_every,
-                                   mesh=mesh, slot_axis=slot_axis)
+                                   mesh=mesh, slot_axis=slot_axis,
+                                   telemetry=self.tel, farm_id=farm_id)
         self._evicted: dict[int, _Evicted] = {}
         self._requeued_progress: dict[int, int] = {}  # readmitted, waiting
         self._ckpt = Checkpointer(ckpt_dir, keep_last=0) if ckpt_dir else None
+        self._last_beat: float | None = None
+        self._hb_file: Heartbeat | None = None
+        self.watchdog: StepWatchdog | None = None
+        if self.tel.enabled:
+            cfg = self.tel.config
+            if cfg.heartbeat_path is not None:
+                self._hb_file = Heartbeat(cfg.heartbeat_path,
+                                          interval_s=cfg.heartbeat_interval_s)
+            self.watchdog = StepWatchdog()
+            # the farm beats on every step-chunk (with the chunk's wall
+            # time); poll/result beat with no observation
+            self.farm.heartbeat = self._beat
+
+    # -- watchdog --------------------------------------------------------------
+    def _beat(self, chunk_wall_s: float | None = None):
+        """One liveness heartbeat (poll or step-chunk).
+
+        Touches the liveness file, feeds the chunk time to the step
+        watchdog, and — when consecutive beats are further apart than
+        ``heartbeat_deadline_s`` — records a stall: the service was
+        wedged (compile storm, device hang, host GC) between beats.
+        """
+        now = time.perf_counter()
+        last, self._last_beat = self._last_beat, now
+        if self._hb_file is not None:
+            self._hb_file.beat()
+        deadline = self.tel.config.heartbeat_deadline_s
+        if last is not None and now - last > deadline:
+            self.tel.metrics.inc("service.watchdog_stalls")
+            self.tel.trace.emit("watchdog_stall", gap_s=now - last,
+                                deadline_s=deadline)
+        if chunk_wall_s is not None and self.watchdog is not None:
+            for ev in self.watchdog.observe(self.farm.device_steps,
+                                            chunk_wall_s):
+                self.tel.metrics.inc("service.watchdog_events", kind=ev.kind)
+                self.tel.trace.emit("watchdog_" + ev.kind, step=ev.step,
+                                    step_time_s=ev.step_time,
+                                    threshold_s=ev.threshold)
 
     # -- intake ---------------------------------------------------------------
     def submit(self, req: SimRequest) -> int:
@@ -51,6 +103,8 @@ class SimulationService:
 
         A failed simulation (admission or compiled step raised) reports
         ``status="failed"`` with the captured ``error`` string."""
+        if self.tel.enabled:
+            self._beat()
         if sid in self.farm.results:
             res = self.farm.results[sid]
             if res.terminated == "failed":
@@ -106,7 +160,8 @@ class SimulationService:
             return False
         req, state, steps_done = pulled
         if self._ckpt is not None:
-            self._ckpt.save(sid, state, blocking=True)
+            with self.tel.section("service.evict_spill"):
+                self._ckpt.save(sid, state, blocking=True)
             state = None
         self._evicted[sid] = _Evicted(req=req, steps_done=steps_done,
                                       state=state)
@@ -126,8 +181,10 @@ class SimulationService:
             return False
         state = ev.state
         if state is None:
-            state = self._ckpt.restore(sid, self.farm.exec.state_template())
-            state = {k: np.asarray(v) for k, v in state.items()}
+            with self.tel.section("service.readmit_restore"):
+                state = self._ckpt.restore(sid,
+                                           self.farm.exec.state_template())
+                state = {k: np.asarray(v) for k, v in state.items()}
         req = dataclasses.replace(ev.req, init_state=state,
                                   step0=ev.steps_done, sid=sid)
         self.farm.submit(req)

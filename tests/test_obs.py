@@ -1,0 +1,432 @@
+"""repro.obs: timer-nesting invariants, metrics round-trips, per-sim trace
+ordering (failed sims included), Chrome-trace schema, the bench-document
+schema, watchdog wiring, compile-cache scoping — and the frozen contract
+that telemetry off is bitwise-invisible."""
+import json
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import api, obs
+from repro.cfd import cavity
+from repro.sim import SimulationService, reset_compile_cache
+from repro.sim.farm import compile_cache_stats
+
+N = 12
+KW = dict(jacobi_iters=8)
+
+
+class _FakeClock:
+    """Deterministic clock: every read advances by one tick."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# timers
+# ---------------------------------------------------------------------------
+class TestTimers:
+    def test_nesting_accumulates(self):
+        tree = obs.TimerTree(clock=_FakeClock())
+        for _ in range(3):
+            with tree.section("outer"):
+                with tree.section("inner"):
+                    pass
+        snap = tree.snapshot()
+        assert snap["outer"]["count"] == 3
+        assert snap["outer"]["children"]["inner"]["count"] == 3
+        assert snap["outer"]["children"]["inner"]["total_s"] <= \
+            snap["outer"]["total_s"]
+
+    @settings(max_examples=25)
+    @given(ops=st.lists(st.integers(min_value=0, max_value=9), max_size=40))
+    def test_child_totals_bounded_by_parent(self, ops):
+        """Cactus timer invariant: once every section is closed, the sum
+        of any node's direct children's totals never exceeds the node's
+        own total (children run inside the parent's open interval)."""
+        tree = obs.TimerTree(clock=_FakeClock())
+        stack = []
+        for op in ops:
+            if op % 2 == 0 or not stack:   # open a (cycling) section name
+                cm = tree.section(f"s{op % 3}")
+                cm.__enter__()
+                stack.append(cm)
+            else:                          # close the innermost
+                stack.pop().__exit__(None, None, None)
+        while stack:
+            stack.pop().__exit__(None, None, None)
+
+        def check(node):
+            child_sum = sum(c["total_s"] for c in node["children"].values())
+            assert child_sum <= node["total_s"] + 1e-9
+            for c in node["children"].values():
+                check(c)
+
+        for root in tree.snapshot().values():
+            check(root)
+
+    def test_report_renders_all_sections(self):
+        tree = obs.TimerTree(clock=_FakeClock())
+        with tree.section("a"), tree.section("b"):
+            pass
+        text = tree.report()
+        assert "a" in text and "b" in text and "count" in text
+
+    def test_threaded_sections_stay_separated(self):
+        tree = obs.TimerTree()
+
+        def work(name):
+            for _ in range(50):
+                with tree.section(name):
+                    with tree.section(f"{name}.child"):
+                        pass
+
+        ts = [threading.Thread(target=work, args=(f"t{i}",))
+              for i in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        snap = tree.snapshot()
+        assert set(snap) == {f"t{i}" for i in range(4)}
+        for i in range(4):
+            assert snap[f"t{i}"]["count"] == 50
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+class TestMetrics:
+    def test_labeled_series_round_trip_through_json(self):
+        reg = obs.Registry()
+        reg.inc("farm.compile_cache", result="hit")
+        reg.inc("farm.compile_cache", 2, result="miss")
+        reg.set("farm.queue_depth", 3, priority=1)
+        for v in (0.01, 0.2, 0.2, 5.0):
+            reg.observe("latency", v, priority=0)
+        snap = json.loads(reg.to_json())
+        assert snap == reg.snapshot()
+        assert snap["counters"]["farm.compile_cache{result=hit}"] == 1
+        assert snap["counters"]["farm.compile_cache{result=miss}"] == 2
+        assert snap["gauges"]["farm.queue_depth{priority=1}"] == 3.0
+        h = snap["histograms"]["latency{priority=0}"]
+        assert h["count"] == 4 and h["min"] == 0.01 and h["max"] == 5.0
+        assert sum(n for _, n in h["buckets"]) == 4
+
+    def test_series_key_is_label_order_insensitive(self):
+        assert obs.series_key("m", {"b": 1, "a": 2}) == "m{a=2,b=1}"
+
+    def test_histogram_percentiles(self):
+        h = obs.Histogram()
+        for v in [0.001] * 90 + [1.0] * 10:
+            h.observe(v)
+        assert h.percentile(50) <= 0.01
+        assert h.percentile(99) >= 0.5
+
+    def test_concurrent_increments_are_not_lost(self):
+        reg = obs.Registry()
+
+        def bump():
+            for _ in range(1000):
+                reg.inc("n")
+
+        ts = [threading.Thread(target=bump) for _ in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert reg.get("n") == 8000
+
+
+# ---------------------------------------------------------------------------
+# traces: lifecycle ordering + chrome export
+# ---------------------------------------------------------------------------
+class TestTraces:
+    @pytest.fixture(scope="class")
+    def traced_farm(self):
+        """A drained farm with healthy sims AND an admission failure."""
+        tel = obs.telemetry()
+        svc = SimulationService(cavity.config(N, **KW), n_slots=2,
+                                telemetry=tel)
+        sids = [svc.submit(cavity.sim_request(N, re=re, steps=s, **KW))
+                for re, s in ((80.0, 8), (160.0, 12), (240.0, 6))]
+        bad = cavity.sim_request(N, re=320.0, steps=5, **KW)
+        bad.init_state = {"vx": np.zeros((2, 2, 2), np.float32)}
+        sids.append(svc.submit(bad))
+        svc.drain()
+        return tel, sids
+
+    def test_per_sim_lifecycle_ordering(self, traced_farm):
+        """submit < admit < result for every sid — failed sims included;
+        healthy sims additionally record first_step between them."""
+        tel, sids = traced_farm
+        for sid in sids:
+            events = tel.trace.events_for(sid)
+            seq = {e["kind"]: e["seq"] for e in events}
+            assert {"submit", "admit", "result"} <= set(seq), events
+            assert seq["submit"] < seq["admit"] < seq["result"]
+            ts = [e["ts"] for e in events]
+            assert ts == sorted(ts)
+
+    def test_failed_sim_result_carries_error(self, traced_farm):
+        tel, sids = traced_farm
+        failed = [e for e in tel.trace.events
+                  if e["kind"] == "result" and e.get("terminated") == "failed"]
+        assert len(failed) == 1
+        assert failed[0]["sid"] == sids[-1] and failed[0]["error"]
+
+    def test_chrome_export_validates_and_spans_slots(self, traced_farm):
+        tel, sids = traced_farm
+        doc = obs.validate_chrome_trace(tel.trace.to_chrome())
+        evs = doc["traceEvents"]
+        # one residency span per admitted sim, on the slot track
+        spans = [e for e in evs if e["ph"] == "X"]
+        assert len(spans) == len(sids)
+        assert all(e["dur"] >= 0 and e["pid"] == 2 for e in spans)
+        # instants carry the sid track and the original payload
+        submits = [e for e in evs if e["name"] == "submit"]
+        assert {e["tid"] for e in submits} == set(sids)
+        assert all("signature" in e["args"] for e in submits)
+
+    def test_chrome_schema_rejects_malformed(self):
+        with pytest.raises(ValueError, match="traceEvents"):
+            obs.validate_chrome_trace({"events": []})
+        with pytest.raises(ValueError, match="missing 'dur'"):
+            obs.validate_chrome_trace({"traceEvents": [
+                {"name": "x", "ph": "X", "ts": 0, "pid": 1, "tid": 0}]})
+        with pytest.raises(ValueError, match="unknown phase"):
+            obs.validate_chrome_trace({"traceEvents": [
+                {"name": "x", "ph": "Z", "ts": 0, "pid": 1, "tid": 0}]})
+
+    def test_jsonl_stream_is_line_per_event(self, tmp_path):
+        path = str(tmp_path / "events.jsonl")
+        tel = obs.telemetry(trace_path=path)
+        tel.trace.emit("submit", sid=0, tag="t")
+        tel.trace.emit("result", sid=0, terminated="steps")
+        tel.trace.close()
+        lines = [json.loads(line) for line in
+                 open(path).read().splitlines()]
+        assert [e["kind"] for e in lines] == ["submit", "result"]
+        assert lines[0]["sid"] == 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry-off is bitwise-invisible
+# ---------------------------------------------------------------------------
+class TestBitwiseInvisible:
+    def test_farm_results_identical_on_vs_off(self):
+        jobs = ((70.0, 9), (150.0, 14), (300.0, 7))
+
+        def run(telemetry):
+            rt = api.runtime(n=N, n_slots=2, telemetry=telemetry, **KW)
+            sids = [rt.submit("cavity", re=re, steps=s)
+                    for re, s in jobs]
+            out = rt.drain()
+            return [out[s] for s in sids]
+
+        on, off = run(True), run(False)
+        for a, b in zip(on, off):
+            assert a.steps_done == b.steps_done
+            for f in ("vx", "vy", "vz", "p"):
+                np.testing.assert_array_equal(a.state[f], b.state[f])
+
+    def test_serial_run_identical_on_vs_off(self):
+        res = [api.runtime(n=N, telemetry=t, **KW).run(
+            "cavity", re=120.0, steps=10) for t in (True, False)]
+        for f in ("vx", "vy", "vz", "p"):
+            np.testing.assert_array_equal(res[0].state[f], res[1].state[f])
+
+    def test_off_runtime_uses_null_telemetry(self):
+        rt = api.runtime(n=N, **KW)
+        assert rt.telemetry is obs.NULL and not rt.telemetry.enabled
+        # every hook degrades to a no-op
+        with rt.telemetry.section("x"):
+            pass
+        rt.telemetry.metrics.inc("x")
+        assert rt.telemetry.metrics.snapshot()["counters"] == {}
+
+
+# ---------------------------------------------------------------------------
+# farm/runtime telemetry content
+# ---------------------------------------------------------------------------
+class TestFarmTelemetry:
+    @pytest.fixture(scope="class")
+    def run_rt(self):
+        rt = api.runtime(n=N, n_slots=2, telemetry=True, **KW)
+        sids = [rt.submit("cavity", re=re, steps=10, priority=p)
+                for re, p in ((90.0, 0), (180.0, 1), (270.0, 0))]
+        rt.drain()
+        return rt, sids
+
+    def test_timers_cover_the_farm_phases(self, run_rt):
+        rt, _ = run_rt
+        snap = rt.telemetry.timers.snapshot()
+        assert {"farm.admit", "farm.step_chunk", "farm.harvest"} <= set(snap)
+        assert snap["farm.step_chunk"]["count"] >= 1
+        assert "ensemble.write_slot" in snap["farm.admit"]["children"]
+
+    def test_metrics_cover_the_farm_load(self, run_rt):
+        rt, sids = run_rt
+        m = rt.telemetry.metrics
+        assert m.get("sim.steps_total") == 10 * len(sids)
+        assert m.get("sim.results", terminated="steps") == len(sids)
+        assert m.get("farm.slot_occupancy") == 0.0   # drained
+        h = m.get("service.submit_to_result_seconds", priority=0)
+        assert h is not None and h.count == 2
+        assert m.get("service.submit_to_result_seconds", priority=1).count \
+            == 1
+
+    def test_report_is_human_readable(self, run_rt):
+        rt, _ = run_rt
+        text = rt.report()
+        assert "repro.obs report" in text
+        assert "farm.step_chunk" in text and "sim.steps_total" in text
+        assert obs.report(rt.telemetry) == text
+
+    def test_schedule_bins_are_timed_on_serial_runs(self):
+        rt = api.runtime(n=N, telemetry=True, **KW)
+        rt.run("cavity", re=100.0, steps=6)
+        snap = rt.telemetry.timers.snapshot()
+        assert "schedule.INITIAL" in snap
+        evolve = snap["run.cavity"]["children"]["schedule.EVOL"]
+        assert evolve["count"] == 6
+        assert "ns3d_step" in evolve["children"]
+
+
+# ---------------------------------------------------------------------------
+# compile-cache lifecycle: scoped to the runtime's registry
+# ---------------------------------------------------------------------------
+class TestCompileCacheScoping:
+    def test_back_to_back_runtimes_report_their_own_hits(self):
+        """The satellite fix: a second runtime of the same signature sees
+        ITS one cache hit, not the first runtime's miss — while the
+        legacy module facade keeps accumulating process-wide."""
+        reset_compile_cache()
+        rt1 = api.runtime(n=N, n_slots=2, telemetry=True, **KW)
+        rt1.submit("cavity", re=100.0, steps=2)
+        rt1.drain()
+        assert compile_cache_stats(rt1.telemetry.metrics) == {
+            "hits": 0, "misses": 1, "entries": 1}
+        rt2 = api.runtime(n=N, n_slots=2, telemetry=True, **KW)
+        rt2.submit("cavity", re=200.0, steps=2)
+        rt2.drain()
+        assert compile_cache_stats(rt2.telemetry.metrics) == {
+            "hits": 1, "misses": 0, "entries": 1}
+        # rt1's scoped view did not absorb rt2's traffic
+        assert compile_cache_stats(rt1.telemetry.metrics)["hits"] == 0
+        facade = compile_cache_stats()
+        assert facade["hits"] == 1 and facade["misses"] == 1
+
+    def test_facade_reset_still_works(self):
+        reset_compile_cache()
+        assert compile_cache_stats() == {"hits": 0, "misses": 0,
+                                         "entries": 0}
+
+
+# ---------------------------------------------------------------------------
+# watchdog wiring (ft.watchdog -> service)
+# ---------------------------------------------------------------------------
+class TestWatchdog:
+    def test_stall_metric_and_trace_on_missed_deadline(self):
+        """With a zero heartbeat deadline every inter-beat gap is a
+        'missed deadline': the stall counter and trace event must fire."""
+        tel = obs.telemetry(heartbeat_deadline_s=0.0)
+        svc = SimulationService(cavity.config(N, **KW), n_slots=2,
+                                telemetry=tel)
+        sid = svc.submit(cavity.sim_request(N, re=100.0, steps=6, **KW))
+        svc.result(sid)
+        svc.poll(sid)
+        assert tel.metrics.get("service.watchdog_stalls") >= 1
+        assert any(e["kind"] == "watchdog_stall" for e in tel.trace.events)
+
+    def test_no_stalls_under_generous_deadline(self):
+        tel = obs.telemetry(heartbeat_deadline_s=3600.0)
+        svc = SimulationService(cavity.config(N, **KW), n_slots=2,
+                                telemetry=tel)
+        sid = svc.submit(cavity.sim_request(N, re=100.0, steps=6, **KW))
+        svc.result(sid)
+        assert tel.metrics.get("service.watchdog_stalls") is None
+        # but the step watchdog did observe every chunk
+        assert svc.watchdog is not None and svc.watchdog.n >= 1
+
+    def test_heartbeat_file_is_touched(self, tmp_path):
+        hb = str(tmp_path / "alive")
+        tel = obs.telemetry(heartbeat_path=hb, heartbeat_interval_s=0.0)
+        svc = SimulationService(cavity.config(N, **KW), n_slots=1,
+                                telemetry=tel)
+        sid = svc.submit(cavity.sim_request(N, re=100.0, steps=3, **KW))
+        svc.result(sid)
+        from repro.ft.watchdog import Heartbeat
+
+        assert Heartbeat.is_alive(hb, deadline_s=60.0)
+
+    def test_disabled_telemetry_installs_no_watchdog(self):
+        svc = SimulationService(cavity.config(N, **KW), n_slots=1)
+        assert svc.watchdog is None and svc.farm.heartbeat is None
+
+
+# ---------------------------------------------------------------------------
+# bench document schema
+# ---------------------------------------------------------------------------
+class TestBenchSchema:
+    def test_round_trip(self, tmp_path):
+        doc = obs.make_bench_doc("ensemble_farm", {"speedup": 2.5},
+                                 passed=True, wall_s=1.25)
+        path = obs.write_bench(doc, str(tmp_path))
+        assert path.endswith("BENCH_ensemble_farm.json")
+        loaded = obs.load_bench(path)
+        assert loaded["metrics"]["speedup"] == 2.5
+        assert loaded["schema"] == obs.BENCH_SCHEMA
+        for f in ("backend", "device_count", "python", "jax"):
+            assert f in loaded["host"]
+
+    def test_malformed_documents_are_named(self):
+        good = obs.make_bench_doc("x", {}, passed=False, wall_s=0.0)
+        for breakage, match in (
+                ({"schema": "repro.bench.v0"}, "schema"),
+                ({"bench": "Bad Name"}, "must match"),
+                ({"passed": "yes"}, "passed"),
+                ({"host": {"backend": "cpu"}}, "host missing"),
+        ):
+            with pytest.raises(ValueError, match=match):
+                obs.validate_bench({**good, **breakage})
+        with pytest.raises(ValueError, match="missing field"):
+            obs.validate_bench({k: v for k, v in good.items()
+                                if k != "metrics"})
+
+    def test_smoke_bench_emits_valid_artifact(self, tmp_path):
+        """The CI smoke lane end-to-end: run the telemetry bench, check
+        the artifact on disk validates and carries the telemetry
+        snapshot."""
+        from benchmarks.run import run_smoke
+
+        doc = run_smoke(str(tmp_path))
+        assert doc["passed"] is True
+        loaded = obs.load_bench(str(tmp_path / "BENCH_smoke.json"))
+        assert loaded["bench"] == "smoke"
+        assert "timers" in loaded["metrics"]["telemetry"]
+        assert loaded["metrics"]["compile_cache"]["entries"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# telemetry resolution
+# ---------------------------------------------------------------------------
+class TestResolve:
+    def test_specs(self):
+        assert obs.resolve(None) is obs.NULL
+        assert obs.resolve(False) is obs.NULL
+        assert obs.resolve(True).enabled
+        tel = obs.telemetry()
+        assert obs.resolve(tel) is tel
+        assert obs.resolve({"named_scopes": False}).config.named_scopes \
+            is False
+        assert obs.resolve(obs.TelemetryConfig(enabled=False)) is obs.NULL
+        with pytest.raises(TypeError):
+            obs.resolve(42)

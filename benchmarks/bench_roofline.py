@@ -1,74 +1,112 @@
-"""Roofline table generator: reads the dry-run artifacts and renders the
-per-(arch × shape × mesh) table for EXPERIMENTS.md §Roofline."""
+"""Roofline table generator — cost-model predictions over live lowerings.
+
+Earlier revisions read pre-baked ``artifacts/dryrun`` JSON (a directory
+this repo no longer ships); the table is now produced directly from the
+perf accounting layer: each (grid × mesh) cell lowers the slots × shards
+ensemble step over an :class:`jax.sharding.AbstractMesh` (no devices
+needed — CI's 1-CPU fast lane covers a 2×4 pod cell), runs the
+trip-count-aware HLO cost model over it, and attributes the predicted
+FLOPs / HBM bytes / collective wire bytes against TPU v5e rooflines.
+Decomposed cells additionally double-check the predicted
+``collective-permute`` bytes against the analytic ghost-zone model
+(:func:`repro.obs.perf.halo_bytes_per_step`) — a MISMATCH fails the
+bench.
+"""
 from __future__ import annotations
 
 import json
-import os
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ART = os.path.join(REPO, "artifacts", "dryrun")
+CHIP = "tpu-v5e"         # the paper-table attribution target
+JACOBI_ITERS = 8
+
+# (n, slot_extent, shard_extent) cells; shard_extent 1 degrades to the
+# plain slot-parallel step (plan_decomposition drops extent-1 axes)
+CELLS_QUICK = [(16, 2, 1), (16, 2, 2), (32, 2, 2), (32, 2, 4)]
+CELLS_FULL = CELLS_QUICK + [(48, 2, 4), (64, 2, 4), (64, 2, 8), (64, 4, 4)]
 
 
-def load(mesh: str = "single") -> list[dict]:
-    d = os.path.join(ART, mesh)
+def perf_rows(quick: bool = False) -> list[dict]:
+    from repro.cfd.ns3d import CFDConfig
+    from repro.obs import perf
+
     rows = []
-    if not os.path.isdir(d):
-        return rows
-    for name in sorted(os.listdir(d)):
-        if name.endswith(".json"):
-            with open(os.path.join(d, name)) as f:
-                rows.append(json.load(f))
+    for n, slots, shards in (CELLS_QUICK if quick else CELLS_FULL):
+        n_slots = 2 * slots
+        cfg = CFDConfig(shape=(n, n, n), extent=1.0, case="cavity",
+                        jacobi_iters=JACOBI_ITERS,
+                        decomposition={0: "shard"})
+        name = f"cavity/n{n}/slot{slots}.shard{shards}"
+        try:
+            text, active = perf.decomposed_step_hlo(
+                cfg, n_slots=n_slots,
+                mesh_axes=(("slot", slots), ("shard", shards)))
+            row = perf.cost_row_from_hlo(
+                text, name=name, kind="farm-step",
+                n_devices=slots * shards)
+            if active:
+                row.halo_bytes_analytic = float(perf.halo_bytes_per_step(
+                    cfg, active, {"slot": slots, "shard": shards},
+                    slots_local=perf._slots_local(n_slots, slots)))
+        except Exception as e:
+            row = perf.CostRow(name=name, kind="farm-step",
+                               status="unparsed",
+                               n_devices=slots * shards,
+                               error=f"{type(e).__name__}: {e}")
+        d = perf.PerfReport([row], chip=CHIP)._attribute(row)
+        d.update(n=n, slots=slots, shards=shards)
+        rows.append(d)
     return rows
 
 
-def table(mesh: str = "single") -> str:
-    rows = load(mesh)
-    hdr = ("| arch | shape | status | compute_s | memory_s | coll_s | "
-           "bottleneck | frac | useful | fits |\n"
-           "|---|---|---|---|---|---|---|---|---|---|\n")
-    out = [hdr]
-    for r in rows:
-        if r["status"] != "ok":
-            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
-                       f"— | — | — | — | — | — | — |\n")
+def table(rows: list[dict] | None = None) -> str:
+    """Markdown roofline table (EXPERIMENTS.md §Roofline)."""
+    if rows is None:
+        rows = perf_rows(quick=True)
+    out = [
+        "| cell | status | flops/inv | HBM B/inv | wire B/inv | "
+        "compute_s | memory_s | coll_s | bottleneck | halo |\n",
+        "|---|---|---|---|---|---|---|---|---|---|\n",
+    ]
+    for d in rows:
+        if d["status"] != "ok":
+            out.append(f"| {d['name']} | {d['status']} "
+                       "| — | — | — | — | — | — | — | — |\n")
             continue
-        rf = r["roofline"]
-        fit = r.get("fits_hbm")
-        fit_s = {True: "yes", False: "NO", None: "?"}[fit]
-        useful = r.get("useful_flops_ratio")
+        halo = {True: "match", False: "MISMATCH",
+                None: "n/a"}[d["halo_match"]]
         out.append(
-            f"| {r['arch']} | {r['shape']} | ok | "
-            f"{rf['compute_s']:.3g} | {rf['memory_s']:.3g} | "
-            f"{rf['collective_s']:.3g} | {rf['bottleneck']} | "
-            f"{rf['roofline_fraction']:.3f} | "
-            f"{useful:.2f} | {fit_s} |\n" if useful else
-            f"| {r['arch']} | {r['shape']} | ok | — | — | — | — | — | — "
-            f"| {fit_s} |\n")
+            f"| {d['name']} | ok | {d['flops']:.3g} | "
+            f"{d['hbm_bytes']:.3g} | {d['collective_wire_bytes']:.3g} | "
+            f"{d['compute_s']:.3g} | {d['memory_s']:.3g} | "
+            f"{d['collective_s']:.3g} | {d['bottleneck']} | {halo} |\n")
     return "".join(out)
 
 
 def run(quick: bool = False) -> dict:
-    single = load("single")
-    multi = load("multi")
-    ok_s = sum(1 for r in single if r["status"] == "ok")
-    sk_s = sum(1 for r in single if r["status"] == "skipped")
-    ok_m = sum(1 for r in multi if r["status"] == "ok")
-    sk_m = sum(1 for r in multi if r["status"] == "skipped")
-    bottl = {}
-    for r in single:
-        if r["status"] == "ok":
-            b = r["roofline"]["bottleneck"]
-            bottl[b] = bottl.get(b, 0) + 1
+    rows = perf_rows(quick=quick)
+    ok = sum(1 for d in rows if d["status"] == "ok")
+    mismatched = [d["name"] for d in rows if d["halo_match"] is False]
+    bottl: dict = {}
+    for d in rows:
+        if d["status"] == "ok":
+            bottl[d["bottleneck"]] = bottl.get(d["bottleneck"], 0) + 1
     return {
         "bench": "roofline_table",
         "paper_analogue": "scale deliverable (40-cell baseline)",
-        "single_ok": ok_s, "single_skipped": sk_s,
-        "multi_ok": ok_m, "multi_skipped": sk_m,
+        "chip": CHIP,
+        "cells_ok": ok,
+        "cells_total": len(rows),
+        "table_cells": 10 * ok,
+        "halo_mismatches": mismatched,
         "bottleneck_histogram": bottl,
-        "passed": (ok_s + sk_s >= 40) and (ok_m + sk_m >= 40),
+        "rows": [{k: d[k] for k in ("name", "status", "flops", "hbm_bytes",
+                                    "collective_wire_bytes", "bottleneck",
+                                    "halo_match")} for d in rows],
+        "passed": ok == len(rows) and not mismatched and 10 * ok >= 40,
     }
 
 
 if __name__ == "__main__":
-    print(table("single"))
-    print(json.dumps(run(), indent=1))
+    rows = perf_rows(quick=True)
+    print(table(rows))
+    print(json.dumps(run(quick=True), indent=1))

@@ -1,0 +1,55 @@
+"""Bless the current smoke bench as the committed regression baseline.
+
+    PYTHONPATH=src python -m benchmarks.bless_baseline [--from DIR_OR_FILE]
+
+Runs the smoke bench (or takes an existing ``BENCH_smoke.json``),
+validates it, and installs it as ``benchmarks/baselines/BENCH_smoke.json``
+— the file ``benchmarks/check_regression.py`` gates CI against.  Commit
+the result deliberately: blessing a slow run lowers the bar for every
+future push.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--from", dest="src", default=None,
+                    help="existing BENCH_smoke.json (or a directory "
+                    "holding one) to bless instead of running the bench")
+    args = ap.parse_args(argv)
+
+    from repro import obs
+
+    if args.src:
+        src = args.src
+        if os.path.isdir(src):
+            src = os.path.join(src, "BENCH_smoke.json")
+    else:
+        from benchmarks.run import run_smoke
+
+        doc = run_smoke(BASELINE_DIR)
+        if not doc["passed"]:
+            print("[bless] refusing to bless a failing smoke run")
+            return 1
+        print(f"[bless] baseline -> "
+              f"{os.path.join(BASELINE_DIR, 'BENCH_smoke.json')}")
+        return 0
+
+    obs.load_bench(src)     # schema-validate before installing
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    dst = os.path.join(BASELINE_DIR, "BENCH_smoke.json")
+    shutil.copyfile(src, dst)
+    print(f"[bless] baseline -> {dst}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -187,6 +187,10 @@ class Runtime:
         self._routes: dict[int, tuple[SimulationService, int]] = {}
         self._failed: dict[int, SimResult] = {}
         self._scenario_of: dict[int, str] = {}
+        # latest PreparedRun per scenario, kept only under telemetry so
+        # perf accounting can re-lower the serial EVOLVE bin; the off path
+        # pins no extra field state
+        self._prepared: dict[str, PreparedRun] = {}
         self._next_sid = 0
 
     # -- resolution -----------------------------------------------------------
@@ -238,8 +242,11 @@ class Runtime:
         tel = self.telemetry if self.telemetry.enabled else None
         state = sched.compile_bin("INITIAL", telemetry=tel)({})
         step = sched.compile_bin("EVOLVE", telemetry=tel)
-        return PreparedRun(scenario=sc, solver=solver, schedule=sched,
-                           state=state, step=step, config=cfg)
+        pr = PreparedRun(scenario=sc, solver=solver, schedule=sched,
+                         state=state, step=step, config=cfg)
+        if self.telemetry.enabled:
+            self._prepared[sc.name] = pr
+        return pr
 
     # -- single-run drive -----------------------------------------------------
     def run(self, scenario, *, n: int | None = None,
@@ -433,9 +440,23 @@ class Runtime:
     def services(self) -> tuple[SimulationService, ...]:
         return tuple(self._services.values())
 
-    def report(self) -> str:
-        """This runtime's ``repro.obs.report()`` (timers + metrics)."""
-        return obs.report(self.telemetry)
+    def perf_report(self, chip="auto", dtype: str = "f32"):
+        """Cost-model-grounded accounting of every executable this
+        runtime compiled: one :class:`repro.obs.perf.PerfReport` row per
+        farm signature and prepared serial scenario, with predicted
+        FLOPs / HBM bytes / collective wire bytes joined against the
+        measured timer sections (see ``repro.obs.perf``)."""
+        from repro.obs import perf
+
+        return perf.report_for_runtime(self, chip=chip, dtype=dtype)
+
+    def report(self, perf: bool = False, chip="auto") -> str:
+        """This runtime's ``repro.obs.report()`` (timers + metrics);
+        ``perf=True`` appends the roofline-attributed perf accounting."""
+        text = obs.report(self.telemetry)
+        if perf:
+            text += "\n" + self.perf_report(chip=chip).render()
+        return text
 
 
 def runtime(n: int = 32, *, backend: str = "jnp", mesh_shape: tuple = (),

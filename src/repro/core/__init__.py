@@ -26,4 +26,7 @@ from repro.core.driver import Domain, GridDriver
 from repro.core import mol
 from repro.core.schedule import Schedule
 from repro.core.autotune import choose_tile, tuned
-from repro.core.rooflinemodel import V5E, RooflineTerms, terms_from_counts
+from repro.core.rooflinemodel import (
+    CHIPS, CPU_HOST, V5E, Chip, RooflineTerms, resolve_chip,
+    terms_from_counts,
+)

@@ -1,7 +1,12 @@
-"""TPU v5e roofline model: hardware constants + term computation.
+"""Roofline model: per-chip hardware constants + term computation.
 
 Used by the tile autotuner (napkin math before lowering), the dry-run
-analyzer (terms from compiled HLO), and the benchmark harness.
+analyzer (terms from compiled HLO), the perf accounting layer
+(``repro.obs.perf``), and the benchmark harness.  Chips live in a small
+registry so utilization is always reported against the peaks of the
+hardware that actually ran — ``resolve_chip("auto")`` picks the entry
+matching ``jax.devices()`` (a CI CPU lane reports against host-class
+peaks, not TPU v5e ones).
 """
 from __future__ import annotations
 
@@ -24,6 +29,65 @@ class Chip:
 
 
 V5E = Chip()
+
+# Deliberately round host-class numbers (a few vector cores of XLA:CPU,
+# dual-channel DDR, "interconnect" = shared memory between forced host
+# devices): utilization on the CPU lane is then labeled against an honest
+# same-order peak instead of a TPU's — the absolute percentages stay
+# rough, but ratios across runs (what the regression gate compares) are
+# meaningful.
+CPU_HOST = Chip(
+    name="cpu-host",
+    peak_flops_bf16=2e11,
+    peak_flops_fp32=2e11,
+    hbm_bandwidth=3e10,
+    hbm_bytes=8e9,
+    ici_link_bandwidth=1e10,
+    ici_links=1,
+    vmem_bytes=32 * 2**20,     # L2/L3-class working set
+)
+
+# GPUs only appear through jax.default_backend() == "gpu"; an A100-class
+# placeholder keeps "auto" total rather than precise.
+GPU_GENERIC = Chip(
+    name="gpu-generic",
+    peak_flops_bf16=312e12,
+    peak_flops_fp32=19.5e12,
+    hbm_bandwidth=1.6e12,
+    hbm_bytes=40e9,
+    ici_link_bandwidth=100e9,
+    ici_links=2,
+    vmem_bytes=40 * 2**20,
+)
+
+CHIPS: dict[str, Chip] = {
+    "tpu-v5e": V5E,
+    "cpu-host": CPU_HOST,
+    "gpu-generic": GPU_GENERIC,
+}
+
+_PLATFORM_CHIP = {"tpu": "tpu-v5e", "cpu": "cpu-host", "gpu": "gpu-generic",
+                  "cuda": "gpu-generic", "rocm": "gpu-generic"}
+
+
+def resolve_chip(spec: "Chip | str | None" = "auto") -> Chip:
+    """Coerce a chip spec to hardware constants.
+
+    Accepts a :class:`Chip` (passes through), a registry name
+    (``"tpu-v5e"``, ``"cpu-host"``, ...), or ``"auto"``/``None`` — which
+    resolves from the platform of ``jax.devices()[0]`` so CI CPU numbers
+    are never reported against TPU peaks.
+    """
+    if isinstance(spec, Chip):
+        return spec
+    if spec is None or spec == "auto":
+        import jax
+
+        platform = jax.devices()[0].platform
+        return CHIPS[_PLATFORM_CHIP.get(platform, "cpu-host")]
+    if spec in CHIPS:
+        return CHIPS[spec]
+    raise KeyError(f"unknown chip {spec!r} (have {sorted(CHIPS)} or 'auto')")
 
 
 @dataclasses.dataclass

@@ -24,7 +24,8 @@ import re
 from collections import defaultdict
 
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16,
 }
@@ -37,7 +38,8 @@ _OP_RE = re.compile(
     r"=\s+(?:\([^)]*\)\s+)?[\w\[\]{},]*\s*"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?(?:\.\d+)?\(")
-_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(pred|f8e4m3fn|f8e5m2|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 

@@ -36,9 +36,14 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\](?:\{[^}]*\})?")
-_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.:-]+)\s*=\s*")
+# the % sigil is optional: optimized post-SPMD text carries it, unoptimized
+# (pre-SPMD ``lowered.compiler_ir(dialect="hlo")``) dumps do not
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.:-]+)\s*=\s*")
 _OPCODE_RE = re.compile(r"\s*([\w-]+)\(")
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.:-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# computation headers come signed ("%name (args) -> type {") in optimized
+# text and bare ("name {", "ENTRY main.42 {") in unoptimized dumps
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.:-]+)\s*(?:\(.*\)\s*->\s*.+)?\{\s*$")
+_ID_RE = re.compile(r"^[\w.:-]+$")
 _CALLS_RE = re.compile(r"calls=%?([\w.:-]+)")
 _TO_APPLY_RE = re.compile(r"to_apply=%?([\w.:-]+)")
 _COND_BODY_RE = re.compile(r"condition=%?([\w.:-]+).*body=%?([\w.:-]+)")
@@ -134,6 +139,14 @@ class Op:
                 a = a.split("*/", 1)[1].strip()
             if a.startswith("%"):
                 out.append(a[1:])
+                continue
+            # unsigiled operands ("collective-permute(slice.159)") and the
+            # "TYPE name" spelling: the identifier is the last token
+            tok = a.split()[-1] if a else ""
+            if tok.startswith("%"):
+                tok = tok[1:]
+            if tok and "[" not in tok and _ID_RE.match(tok):
+                out.append(tok)
         return out
 
 
@@ -194,7 +207,7 @@ def parse_module(hlo_text: str) -> dict:
         line = raw.rstrip()
         if not line:
             continue
-        mc = _COMP_RE.match(line)
+        mc = _COMP_RE.match(line) if " = " not in line else None
         if mc and line.endswith("{"):
             cur = Computation(mc.group(1), [], {})
             comps[cur.name] = cur
@@ -242,27 +255,49 @@ def _group_size(rest: str, default: int) -> int:
     return default
 
 
-def _collective_wire_bytes(op: Op, n_default: int):
-    """(kind, operand_bytes, wire_bytes) from the RESULT shape."""
+def _collective_wire_bytes(op: Op, n_default: int, symbols: dict | None = None):
+    """(kind, operand_bytes, result_bytes, wire_bytes) for one collective.
+
+    Sync forms derive the operand from the RESULT shape.  The async
+    ``-start`` halves carry a tuple result (operand, result[, scratch]) —
+    deriving from it would double-count the pair — so there the operand is
+    resolved from the operand symbols instead (the matching ``-done`` op
+    is skipped by the caller, counting each async pair exactly once).
+    """
     kind = op.opcode.replace("-start", "")
-    result_b = _parse_shape_bytes(op.type_str)
     n = max(_group_size(op.rest, n_default), 1)
+    operand = None
+    if op.opcode.endswith("-start") and symbols is not None:
+        ob = sum(_parse_shape_bytes(symbols.get(o, ""))
+                 for o in op.operand_names)
+        if ob:
+            operand = float(ob)
     if kind == "all-gather":
-        operand = result_b / n
+        if operand is None:
+            operand = _parse_shape_bytes(op.type_str) / n
+        result = operand * n
         wire = operand * (n - 1)
     elif kind == "reduce-scatter":
-        operand = result_b * n
+        if operand is None:
+            operand = _parse_shape_bytes(op.type_str) * n
+        result = operand / n
         wire = operand * (n - 1) / n
     elif kind == "all-reduce":
-        operand = result_b
+        if operand is None:
+            operand = _parse_shape_bytes(op.type_str)
+        result = operand
         wire = operand * 2.0 * (n - 1) / n
     elif kind in ("all-to-all", "ragged-all-to-all"):
-        operand = result_b
+        if operand is None:
+            operand = _parse_shape_bytes(op.type_str)
+        result = operand
         wire = operand * (n - 1) / n
     else:  # collective-permute
-        operand = result_b
+        if operand is None:
+            operand = _parse_shape_bytes(op.type_str)
+        result = operand
         wire = float(operand)
-    return kind, float(operand), float(wire)
+    return kind, float(operand), float(result), float(wire)
 
 
 @dataclasses.dataclass
@@ -512,6 +547,14 @@ def _comp_cost(comp_name: str, module: dict, n_devices: int,
                 inner = _comp_cost(called.name, module, n_devices, memo,
                                    include_bytes=False)
                 cost.flops += inner.flops
+                # a fusion-wrapped collective (pre-SPMD dumps wrap the
+                # permute + its ghost assembly) still puts bytes on the
+                # wire — propagate the inner collective inventory
+                cost.collective_wire_bytes += inner.collective_wire_bytes
+                for ck, cv in inner.collective_counts.items():
+                    cost.collective_counts[ck] += cv
+                for ck, cv in inner.collective_bytes.items():
+                    cost.collective_bytes[ck] += cv
             if include_bytes and not in_kernel:
                 io_reads, io_write = (_fusion_io(called)
                                       if called is not None else ({}, None))
@@ -538,14 +581,14 @@ def _comp_cost(comp_name: str, module: dict, n_devices: int,
                     charge_write(op, "fusion")
             continue
         if oc in _COLLECTIVES:
-            kind, operand_b, wire_b = _collective_wire_bytes(op, n_devices)
+            kind, operand_b, result_b, wire_b = _collective_wire_bytes(
+                op, n_devices, comp.symbols)
             cost.collective_counts[kind] += 1
             cost.collective_bytes[kind] += operand_b
             cost.collective_wire_bytes += wire_b
             if include_bytes and not in_kernel:
-                cost.bytes += operand_b + _parse_shape_bytes(op.type_str)
-                cost.bytes_by_opcode["collective"] += (
-                    operand_b + _parse_shape_bytes(op.type_str))
+                cost.bytes += operand_b + result_b
+                cost.bytes_by_opcode["collective"] += operand_b + result_b
             continue
         if oc.endswith("-done") or oc in _SKIP_BYTES or oc in _FUSED_THROUGH \
                 or oc == "bitcast":
@@ -634,3 +677,22 @@ def analyze(hlo_text: str, n_devices: int) -> HloCost:
     # fusions' called computations must not be double counted when reached
     # from the entry walk — _comp_cost handles them only via their callers.
     return _comp_cost(module["entry"], module, n_devices, {})
+
+
+def safe_analyze(hlo_text: str, n_devices: int
+                 ) -> tuple[HloCost, str, str | None]:
+    """``(cost, status, error)`` — the mid-run-safe front of :func:`analyze`.
+
+    The perf accounting layer runs over every executable the runtime
+    produces; an HLO dialect this parser has not met yet must record
+    ``status="unparsed"`` (empty cost, error string) instead of raising
+    into the drive loop.
+    """
+    try:
+        cost = analyze(hlo_text, n_devices)
+    except Exception as e:  # malformed/unknown dialect: never raise mid-run
+        return HloCost(), "unparsed", f"{type(e).__name__}: {e}"
+    if not (cost.flops or cost.bytes or cost.collective_counts):
+        if "ENTRY" not in hlo_text:
+            return cost, "unparsed", "no ENTRY computation found"
+    return cost, "ok", None

@@ -228,3 +228,15 @@ def report(tel: Telemetry | None = None) -> str:
     """Render the handle's (default: the most recently enabled
     telemetry's) timer/metrics summary."""
     return (tel if tel is not None else _CURRENT).report()
+
+
+def __getattr__(name: str):
+    # repro.obs.perf pulls in the cost model / roofline chips (and, at
+    # call time, jax + the farm stack) — lazy so `import repro.obs` stays
+    # light and the farm's own top-level `from repro import obs` cannot
+    # cycle through it
+    if name == "perf":
+        import importlib
+
+        return importlib.import_module("repro.obs.perf")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

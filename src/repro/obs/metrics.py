@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import bisect
 import json
+import re
 import threading
 
 # histogram bucket upper bounds: 1-2-5 per decade from 1 µs to 10 ks —
@@ -156,6 +157,67 @@ class Registry:
             self._hists.clear()
 
     # -- rendering ------------------------------------------------------------
+    def to_prometheus(self, prefix: str = "repro") -> str:
+        """Prometheus text-exposition rendering of every series.
+
+        Series names are sanitized (``farm.queue_depth{priority=1}`` ->
+        ``repro_farm_queue_depth{priority="1"}``); histograms emit the
+        standard cumulative ``_bucket``/``_sum``/``_count`` triple.  This
+        is what :meth:`repro.sim.service.SimulationService.prometheus_text`
+        serves, so the farm is scrape-able from day one.
+        """
+        lines: list[str] = []
+        snap = self.snapshot()
+
+        def split(key: str) -> tuple[str, str]:
+            name, _, inner = key.partition("{")
+            metric = prefix + "_" + re.sub(r"[^a-zA-Z0-9_]", "_", name)
+            if not inner:
+                return metric, ""
+            pairs = []
+            for kv in inner.rstrip("}").split(","):
+                k, _, v = kv.partition("=")
+                pairs.append(f'{re.sub(r"[^a-zA-Z0-9_]", "_", k.strip())}'
+                             f'="{v.strip()}"')
+            return metric, "{" + ",".join(pairs) + "}"
+
+        typed: set = set()
+
+        def emit(key: str, value, kind: str, suffix: str = "",
+                 extra_label: str | None = None):
+            metric, labels = split(key)
+            if (metric, kind) not in typed:
+                typed.add((metric, kind))
+                lines.append(f"# TYPE {metric}{suffix} {kind}")
+            if extra_label:
+                labels = (labels[:-1] + "," + extra_label + "}" if labels
+                          else "{" + extra_label + "}")
+            lines.append(f"{metric}{suffix}{labels} {value:g}")
+
+        for k in sorted(snap["counters"]):
+            emit(k, snap["counters"][k], "counter")
+        for k in sorted(snap["gauges"]):
+            emit(k, snap["gauges"][k], "gauge")
+        with self._lock:
+            hists = dict(self._hists)
+        for k in sorted(hists):
+            h = hists[k]
+            metric, labels = split(k)
+            if (metric, "histogram") not in typed:
+                typed.add((metric, "histogram"))
+                lines.append(f"# TYPE {metric} histogram")
+            seen = 0
+            base = labels[1:-1] + "," if labels else ""
+            for le, n in zip(h.bounds, h.counts):
+                if n:
+                    seen += n
+                    lines.append(f'{metric}_bucket{{{base}le="{le:g}"}} '
+                                 f"{seen}")
+            lines.append(f'{metric}_bucket{{{base}le="+Inf"}} {h.count}')
+            lines.append(f"{metric}_sum{labels} {h.sum:g}")
+            lines.append(f"{metric}_count{labels} {h.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
     def report(self) -> str:
         """Human-readable block for ``repro.obs.report()``."""
         snap = self.snapshot()

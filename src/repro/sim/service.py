@@ -194,6 +194,25 @@ class SimulationService:
         self._requeued_progress[sid] = ev.steps_done
         return True
 
+    def prometheus_text(self, perf: bool = False, chip="auto") -> str:
+        """Prometheus text-exposition scrape of this service's telemetry
+        registry (``Registry.to_prometheus``).  ``perf=True`` first
+        mirrors the cost-model accounting of the farm's compiled step into
+        ``repro_perf_*`` gauges (utilization, roofline seconds, predicted
+        FLOPs / HBM / wire bytes per invocation) so an external scraper
+        sees prediction and measurement side by side.  Disabled telemetry
+        scrapes empty rather than raising."""
+        if perf and self.tel.enabled:
+            from repro.obs import perf as _perf
+
+            chunk_s, _ = _perf._find_sections(self.tel.timers.snapshot(),
+                                              "farm.step_chunk")
+            per_step = (chunk_s / self.farm.device_steps
+                        if chunk_s and self.farm.device_steps else None)
+            row = _perf.farm_cost_row(self, measured_s=per_step)
+            _perf.PerfReport([row], chip=chip).export_gauges(self.tel.metrics)
+        return self.tel.metrics.to_prometheus()
+
     def drain(self, max_device_steps: int = 100_000) -> dict[int, SimResult]:
         """Readmit everything evicted, then run the farm dry.
 

@@ -1,0 +1,296 @@
+"""repro.obs.perf: cost-model accounting end to end — the analytic
+ghost-zone model pinned against the HLO-predicted collective-permute
+bytes (the fast-lane AbstractMesh lowering needs no devices), the
+perf-on/off bitwise contract, the unparsed-HLO fallback, the chip
+registry, the Prometheus surface, and the bench regression gate
+(including the injected-2x-slowdown failure)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from benchmarks.check_regression import compare
+from repro import api, obs
+from repro.cfd.ns3d import CFDConfig
+from repro.core.rooflinemodel import CHIPS, V5E, Chip, resolve_chip
+from repro.launch import hlo_cost
+from repro.obs import perf
+from repro.sim import SimulationService
+
+N = 12
+KW = dict(jacobi_iters=8)
+
+
+def _cfg(n=16, **kw):
+    kw.setdefault("jacobi_iters", 8)
+    return CFDConfig(shape=(n, n, n), extent=1.0, case="cavity",
+                     decomposition={0: "shard"}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# predicted halo bytes == analytic ghost-zone bytes (the tentpole check)
+# ---------------------------------------------------------------------------
+class TestHaloPrediction:
+    def test_decomposed_step_permute_bytes_match_analytic(self):
+        """The slots × shards cavity step's collective-permutes, counted
+        by the trip-count-aware cost model over the AbstractMesh
+        lowering, must carry exactly the bytes the decomposition plan
+        implies — velocity halos, divergence/projection one-sided pads,
+        and the Jacobi loop multiplied by its trip count."""
+        cfg = _cfg(16)
+        text, active = perf.decomposed_step_hlo(
+            cfg, n_slots=4, mesh_axes=(("slot", 2), ("shard", 2)))
+        assert active == {0: "shard"}
+        cost, status, err = hlo_cost.safe_analyze(text, 4)
+        assert status == "ok" and err is None
+        predicted = cost.collective_bytes["collective-permute"]
+        analytic = perf.halo_bytes_per_step(
+            cfg, active, {"slot": 2, "shard": 2},
+            slots_local=perf._slots_local(4, 2))
+        assert predicted == analytic
+        # permute inventory on one decomposed axis — velocity two-sided
+        # (2×3), divergence one-sided (3), jacobi two-sided × trip count
+        # (2×iters), projection one-sided (1)
+        assert cost.collective_counts["collective-permute"] == \
+            2 * 3 + 3 + 2 * cfg.jacobi_iters + 1
+        # the pressure solve's global mean is an all-reduce, not a permute
+        assert cost.collective_counts["all-reduce"] >= 1
+
+    def test_fused_sweeps_widen_the_analytic_halo(self):
+        """The communication-avoiding smoother (fused_sweeps=k) trades
+        k-wide halos for k-fewer exchanges; both sides of the bookkeeping
+        must move together."""
+        cfg = _cfg(16, fused_sweeps=2)
+        text, active = perf.decomposed_step_hlo(
+            cfg, n_slots=2, mesh_axes=(("slot", 1), ("shard", 2)))
+        cost, status, _ = hlo_cost.safe_analyze(text, 2)
+        assert status == "ok"
+        analytic = perf.halo_bytes_per_step(
+            cfg, active, {"slot": 1, "shard": 2},
+            slots_local=perf._slots_local(2, 1))
+        assert cost.collective_bytes["collective-permute"] == analytic
+
+    def test_runtime_report_carries_the_match(self):
+        rt = api.runtime(n=N, n_slots=2, telemetry=True, **KW)
+        rt.submit("cavity", re=100.0, steps=4)
+        rt.drain()
+        rep = rt.perf_report()
+        rows = rep.rows()
+        assert len(rows) == 1 and rows[0]["kind"] == "farm-step"
+        assert rows[0]["status"] == "ok"
+        assert rows[0]["measured_s"] and rows[0]["measured_s"] > 0
+        assert rows[0]["bottleneck"] in ("compute", "memory", "collective")
+        text = rt.report(perf=True)
+        assert "perf accounting" in text and "farm/cavity" in text
+
+
+# ---------------------------------------------------------------------------
+# perf accounting is observation-only: outputs bitwise identical on/off
+# ---------------------------------------------------------------------------
+class TestBitwiseInvisible:
+    @settings(max_examples=3, deadline=None)
+    @given(re=st.sampled_from([80.0, 160.0, 320.0]),
+           steps=st.integers(min_value=3, max_value=8))
+    def test_perf_accounting_never_perturbs_results(self, re, steps):
+        def run(with_perf):
+            rt = api.runtime(n=N, n_slots=2,
+                             telemetry=bool(with_perf), **KW)
+            sid = rt.submit("cavity", re=re, steps=steps)
+            rt.drain()
+            if with_perf:
+                rt.report(perf=True)         # lowers + costs mid-session
+                sid2 = rt.submit("cavity", re=re, steps=steps)
+                rt.drain()
+                a, b = rt.result(sid), rt.result(sid2)
+                for f in ("vx", "vy", "vz", "p"):
+                    np.testing.assert_array_equal(a.state[f], b.state[f])
+            return rt.result(sid)
+
+        on, off = run(True), run(False)
+        assert on.steps_done == off.steps_done
+        for f in ("vx", "vy", "vz", "p"):
+            np.testing.assert_array_equal(on.state[f], off.state[f])
+
+
+# ---------------------------------------------------------------------------
+# unparsed fallback: never raise into a drive loop
+# ---------------------------------------------------------------------------
+class TestUnparsedFallback:
+    def test_safe_analyze_flags_garbage(self):
+        cost, status, err = hlo_cost.safe_analyze("not hlo at all", 1)
+        assert status == "unparsed" and err
+        assert cost.flops == 0.0 and cost.bytes == 0.0
+
+    def test_cost_row_and_report_survive_garbage(self):
+        row = perf.cost_row_from_hlo("HloModule m {", name="x", kind="farm-step")
+        assert row.status == "unparsed"
+        rep = perf.PerfReport([row], chip="cpu-host")
+        d = rep.rows()[0]
+        assert d["bottleneck"] == "unknown" and d["utilization"] is None
+        assert "unparsed" in rep.render()
+        perf.validate_perf(rep.as_dict())     # still schema-complete
+
+    def test_validate_perf_names_problems(self):
+        with pytest.raises(ValueError, match="schema"):
+            perf.validate_perf({"schema": "nope", "chip": {"name": "x"},
+                                "rows": []})
+        with pytest.raises(ValueError, match="rows"):
+            perf.validate_perf({"schema": perf.PERF_SCHEMA,
+                                "chip": {"name": "x"}, "rows": None})
+
+
+# ---------------------------------------------------------------------------
+# chip registry (the hardcoded-v5e bugfix)
+# ---------------------------------------------------------------------------
+class TestChipRegistry:
+    def test_auto_resolves_to_the_running_platform(self):
+        import jax
+
+        chip = resolve_chip("auto")
+        assert chip is CHIPS[{"cpu": "cpu-host", "tpu": "tpu-v5e"}.get(
+            jax.devices()[0].platform, "gpu-generic")]
+        assert resolve_chip(None) is chip
+
+    def test_names_and_passthrough(self):
+        assert resolve_chip("tpu-v5e") is V5E
+        mine = Chip(name="custom")
+        assert resolve_chip(mine) is mine
+        with pytest.raises(KeyError, match="unknown chip"):
+            resolve_chip("tpu-v9000")
+
+    def test_report_attributes_against_the_resolved_chip(self):
+        row = perf.CostRow(name="r", kind="farm-step", flops=1e9,
+                           hbm_bytes=1e6, measured_s=1e-3, invocations=1)
+        cpu = perf.PerfReport([row], chip="cpu-host").rows()[0]
+        tpu = perf.PerfReport([row], chip="tpu-v5e").rows()[0]
+        assert cpu["compute_s"] > tpu["compute_s"]   # smaller peak, more s
+        assert cpu["utilization"] > tpu["utilization"]
+
+
+# ---------------------------------------------------------------------------
+# Prometheus surface
+# ---------------------------------------------------------------------------
+class TestPrometheus:
+    def test_registry_text_format(self):
+        reg = obs.Registry()
+        reg.inc("farm.steps", 3, farm="a/b")
+        reg.set("farm.occupancy", 0.5)
+        reg.observe("service.latency_seconds", 0.004)
+        text = reg.to_prometheus()
+        assert "# TYPE repro_farm_steps counter" in text
+        assert 'repro_farm_steps{farm="a/b"} 3' in text
+        assert "# TYPE repro_farm_occupancy gauge" in text
+        assert "# TYPE repro_service_latency_seconds histogram" in text
+        assert 'repro_service_latency_seconds_bucket{le="+Inf"} 1' in text
+        assert "repro_service_latency_seconds_count 1" in text
+
+    def test_service_scrape_includes_perf_gauges(self):
+        svc = SimulationService(
+            CFDConfig(shape=(N, N, N), extent=1.0, case="cavity", **KW),
+            n_slots=2, telemetry=obs.telemetry())
+        from repro.sim.farm import SimRequest
+
+        svc.submit(SimRequest(sid=0, config=svc.farm.base_config,
+                              steps=3))
+        svc.drain()
+        text = svc.prometheus_text(perf=True)
+        assert "repro_perf_utilization" in text
+        assert "repro_perf_bottleneck" in text
+        assert "repro_farm_" in text      # farm metrics ride along
+
+    def test_disabled_telemetry_scrapes_empty(self):
+        svc = SimulationService(
+            CFDConfig(shape=(N, N, N), extent=1.0, case="cavity", **KW),
+            n_slots=2)
+        assert svc.prometheus_text() == ""
+
+
+# ---------------------------------------------------------------------------
+# the regression gate
+# ---------------------------------------------------------------------------
+def _bench_doc(tp=100.0, *, passed=True, util=0.2, measured=1e-3,
+               wire=6656.0, halo_match=True, host=None, status="ok"):
+    row = {k: 0 for k in perf.ROW_KEYS}
+    row.update(name="farm/cavity/sig000", kind="farm-step", status=status,
+               measured_s=measured, utilization=util,
+               collective_wire_bytes=wire, collective_s=wire / 5e10,
+               halo_bytes_analytic=6656.0,
+               halo_bytes_predicted=6656.0 if halo_match else 9999.0,
+               halo_match=halo_match, hbm_bytes=1e6, flops=0.0)
+    return {
+        "schema": obs.BENCH_SCHEMA, "bench": "smoke", "passed": passed,
+        "host": host or {"backend": "cpu", "device_count": 1},
+        "metrics": {
+            "steady_sim_steps_per_s": tp,
+            "perf": {"schema": perf.PERF_SCHEMA,
+                     "chip": {"name": "cpu-host"}, "dtype": "f32",
+                     "rows": [row]},
+        },
+    }
+
+
+class TestRegressionGate:
+    def test_identical_docs_pass(self):
+        v = compare(_bench_doc(), _bench_doc())
+        assert v["passed"] and not v["failures"]
+
+    def test_injected_2x_slowdown_fails_with_attribution(self):
+        """The acceptance scenario: halve throughput, double measured
+        seconds, leave the predicted cost untouched — the gate must fail
+        AND blame the runtime rather than the program."""
+        fresh = _bench_doc(tp=50.0, measured=2e-3, util=0.1)
+        v = compare(fresh, _bench_doc(tp=100.0))
+        assert not v["passed"]
+        assert any("throughput regression" in f for f in v["failures"])
+        assert any("50.0% slower" in f for f in v["failures"])
+        assert any("predicted cost flat" in e for e in v["explanations"])
+
+    def test_within_gate_passes(self):
+        v = compare(_bench_doc(tp=85.0), _bench_doc(tp=100.0))
+        assert v["passed"]
+
+    def test_utilization_collapse_fails(self):
+        v = compare(_bench_doc(util=0.01), _bench_doc(util=0.2))
+        assert not v["passed"]
+        assert any("utilization collapse" in f for f in v["failures"])
+
+    def test_collective_growth_blames_the_schedule(self):
+        fresh = _bench_doc(tp=40.0, measured=3e-3, wire=3 * 6656.0)
+        v = compare(fresh, _bench_doc(tp=100.0))
+        assert not v["passed"]
+        assert any("schedule regression" in e for e in v["explanations"])
+
+    def test_host_mismatch_skips_wall_clock_gates(self):
+        fresh = _bench_doc(tp=10.0, host={"backend": "cpu",
+                                          "device_count": 8})
+        v = compare(fresh, _bench_doc(tp=100.0))
+        assert v["passed"]
+        assert any("host mismatch" in w for w in v["warnings"])
+
+    def test_halo_mismatch_fails_even_cross_host(self):
+        fresh = _bench_doc(halo_match=False,
+                           host={"backend": "tpu", "device_count": 4})
+        v = compare(fresh, _bench_doc())
+        assert not v["passed"]
+        assert any("halo bytes" in f for f in v["failures"])
+
+    def test_missing_baseline_warns_and_passes(self):
+        v = compare(_bench_doc(), None)
+        assert v["passed"]
+        assert any("no baseline" in w for w in v["warnings"])
+
+    def test_row_turned_unparsed_fails(self):
+        v = compare(_bench_doc(status="unparsed"), _bench_doc())
+        assert not v["passed"]
+        assert any("turned 'unparsed'" in f for f in v["failures"])
+
+    def test_committed_baseline_is_valid(self):
+        """The file CI gates against must itself load, validate, and
+        carry a well-formed perf block."""
+        import os
+
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "benchmarks", "baselines",
+            "BENCH_smoke.json")
+        doc = obs.load_bench(path)
+        perf.validate_perf(doc["metrics"]["perf"])
+        assert doc["passed"] is True

@@ -16,7 +16,11 @@ Failure conditions (exit 1, CI-red):
 * a perf row's achieved utilization collapsed to under half its baseline
   (same-host only);
 * any fresh perf row reports a halo-byte MISMATCH or turned
-  ``unparsed`` relative to its baseline row.
+  ``unparsed`` relative to its baseline row;
+* a ``BENCH_ensemble_pallas.json`` artifact breaks a structural
+  invariant — farm-vs-serial bitwise parity, one compiled executable
+  per static signature, a throughput row per ensemble size — gated
+  baseline-free on any host (``structural_failures``).
 
 When the throughput gate trips, the perf attribution explains *why* by
 diffing the predicted-cost rows: measured seconds up with predicted
@@ -98,6 +102,38 @@ def explain(base_row: dict, fresh_row: dict) -> list[str]:
     return notes
 
 
+def structural_failures(fresh: dict) -> list[str]:
+    """Host-independent invariants of the Pallas ensemble bench
+    (``BENCH_ensemble_pallas.json``) — gated without any baseline, on any
+    machine: the farm really ran the Pallas template, stayed bitwise with
+    serial, and compiled exactly one executable per static signature."""
+    if fresh.get("bench") != "ensemble_pallas":
+        return []
+    m = fresh.get("metrics", {})
+    fails = []
+    if not str(m.get("resolved_backend", "")).startswith("pallas"):
+        fails.append("ensemble_pallas: resolved_backend "
+                     f"{m.get('resolved_backend')!r} is not a pallas "
+                     "backend")
+    rows = m.get("batches") or []
+    if not rows:
+        fails.append("ensemble_pallas: no per-ensemble throughput rows")
+    for r in rows:
+        if not (isinstance(r, dict) and r.get("farm_steps_per_s", 0) > 0):
+            fails.append(f"ensemble_pallas: ensemble={r.get('ensemble')} "
+                         "row has no farm throughput")
+    if m.get("parity", {}).get("bitwise_ok") is not True:
+        fails.append("ensemble_pallas: farm-vs-serial bitwise parity did "
+                     "not hold (scalar-table regression?)")
+    misses = m.get("compile_cache", {}).get("misses")
+    if misses != m.get("expected_compile_misses"):
+        fails.append(
+            f"ensemble_pallas: {misses} compile misses, expected "
+            f"{m.get('expected_compile_misses')} — not one executable per "
+            "static signature (per-scalar recompile regression?)")
+    return fails
+
+
 def compare(fresh: dict, baseline: dict | None,
             max_regression: float = 0.2) -> dict:
     """Pure gate logic over two ``repro.bench.v1`` docs (the unit-tested
@@ -108,6 +144,12 @@ def compare(fresh: dict, baseline: dict | None,
 
     if not fresh.get("passed"):
         failures.append("fresh bench did not pass")
+    failures.extend(structural_failures(fresh))
+    if baseline is not None and baseline.get("bench") != fresh.get("bench"):
+        warnings.append(
+            f"baseline is for bench {baseline.get('bench')!r}, fresh is "
+            f"{fresh.get('bench')!r}: baseline gates skipped")
+        baseline = None
     fresh_perf = _perf_rows(fresh)
     for name, row in fresh_perf.items():
         if row.get("halo_match") is False:

@@ -51,8 +51,15 @@ __all__ = [
 # The 3DBLOCK template is the monolithic tiled kernel: it needs
 # tile-divisible interiors, so the Pallas backends disable the
 # interior/boundary overlap split (a JNP-path optimization whose deep
-# interior is never tile-aligned).  Grid extents must divide the kernel
-# tile (the generator raises a clear error otherwise).
+# interior is never tile-aligned).  Tiles are chip-aware roofline choices
+# (autotune.tile_for) resolved per local interior, so any grid the
+# autotuner can divide runs without hand-tuned TILE constants.
+# Every backend serves every execution path — serial, slot-parallel farm,
+# and slots × shards: per-simulation scalars reach the Pallas kernels
+# through the generator's scalar-table operand (scalar prefetch on real
+# TPU), so farm runs under "pallas"/"pallas-interpret" share one compiled
+# kernel across heterogeneous slots and match "jnp" farms to tolerance
+# (and pallas-interpret serial runs bitwise).
 # "auto" resolves AT CONFIGURE TIME to "pallas" on TPU hosts and "jnp"
 # elsewhere — the resolved config always carries an explicit template,
 # never None (the solver would coerce None to JNP regardless of device).

@@ -216,6 +216,11 @@ class NavierStokes3D:
         if params is None:
             params = params_from_config(c)
         kw = dict(template=c.template or "JNP", interpret=c.interpret)
+        if kw["template"] == "3DBLOCK":
+            # chip-aware roofline tile, resolved per local interior and
+            # memoized (autotune.tile_for) — serial and farm runs of the
+            # same grid resolve the same tile, a bitwise-parity invariant
+            kw["tile"] = "auto"
         h = c.h
         dt, nu = params["dt"], params["nu"]
         bc = self._bcs_for(params["lid_velocity"])
@@ -286,23 +291,15 @@ class NavierStokes3D:
     def make_step(self) -> Callable[[dict], dict]:
         """Jitted global step (shard_map'd when a mesh decomposes the grid).
 
-        The config's scalars are threaded as f32 constants through the same
-        parameterized step the simulation farm vmaps, so a serial run is the
-        exact reference for a farm slot with the same parameters.
-
-        The 3DBLOCK (Pallas) template takes scalar parameters as
-        compile-time literals — traced-scalar threading awaits the
-        scalar-prefetch ROADMAP item — so there the physics is baked into
-        the kernel as Python floats instead.
+        The config's scalars are threaded as f32 traced values through the
+        same parameterized step the simulation farm vmaps — on the 3DBLOCK
+        (Pallas) template they ride the generator's scalar-table operand
+        (scalar prefetch on real TPU) exactly like a farm slot's table row —
+        so a serial run is the bitwise reference for a farm slot with the
+        same parameters on every template.
         """
         c = self.config
         example = self.init_state()
-        if c.template == "3DBLOCK":
-            fx, fy, fz = c.forcing
-            static = dict(nu=c.nu, dt=c.dt, lid_velocity=c.lid_velocity,
-                          fx=fx, fy=fy, fz=fz)
-            return self.driver.sharded_step_tree(
-                lambda s: self._step_local(s, static), example)
         params = params_from_config(c)
         jstep = self.driver.sharded_step_tree(self._step_local, example, params)
         return lambda s: jstep(s, params)

@@ -9,7 +9,7 @@ Public surface:
   driver.GridDriver / Domain                   — domain decomposition driver
   mol                                          — Method of Lines integrators
   schedule.Schedule                            — schedule tree
-  autotune.choose_tile                         — roofline-driven TILE tuning
+  autotune.choose_tile / tile_for              — roofline-driven TILE tuning
 """
 from repro.core.descriptor import Intent, StencilDescriptor, VariableGroup, descriptor
 from repro.core.ccl import parse_ccl, parse_ccl_file
@@ -25,7 +25,9 @@ from repro.core.halo import (
 from repro.core.driver import Domain, GridDriver
 from repro.core import mol
 from repro.core.schedule import Schedule
-from repro.core.autotune import choose_tile, tuned
+from repro.core.autotune import (
+    choose_tile, reset_tile_cache, tile_cache_stats, tile_for, tuned,
+)
 from repro.core.rooflinemodel import (
     CHIPS, CPU_HOST, V5E, Chip, RooflineTerms, resolve_chip,
     terms_from_counts,

@@ -5,13 +5,26 @@ in the descriptors.  On TPU we can do better: enumerate hardware-aligned
 candidate tiles, keep those whose staged working set fits the VMEM budget,
 and maximize arithmetic intensity (halo amortization).  Deterministic — no
 on-device search — so it is usable at trace time and in the dry-run.
+
+Budgets come from the PR 7 chip registry: ``chip="auto"`` (the default)
+resolves via :func:`repro.core.rooflinemodel.resolve_chip` to the hardware
+that actually runs — a CI CPU lane tunes against cpu-host working-set
+budgets, never against TPU v5e VMEM.
+
+:func:`tile_for` is the memoized production entry point: the solver's hot
+path (``ops.apply_kernel(tile="auto")``) resolves one choice per
+``(kernel, local_shape, dtype, chip)`` signature and the choice is cached
+here — alongside the per-static-signature compile cache, since the tile
+feeds the executable's cache key — with hit/miss counters the test suite
+asserts on.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core.descriptor import Intent, StencilDescriptor
-from repro.core.rooflinemodel import V5E, Chip, stencil_arithmetic_intensity
+from repro.core.rooflinemodel import Chip, resolve_chip, \
+    stencil_arithmetic_intensity
 
 # VPU lanes/sublanes: last dim multiples of 128, second-to-last multiples of 8
 _LANE = 128
@@ -35,10 +48,15 @@ def choose_tile(
     *,
     itemsize: int = 4,
     flops_per_cell: float = 10.0,
-    chip: Chip = V5E,
+    chip: Chip | str | None = "auto",
     vmem_fraction: float = 0.5,
 ) -> TileChoice:
-    """Best aligned tile dividing ``local_shape`` that fits the VMEM budget."""
+    """Best aligned tile dividing ``local_shape`` that fits the VMEM budget.
+
+    ``chip`` accepts a :class:`Chip`, a registry name, or ``"auto"`` (the
+    default): budgets then match the hardware running the kernel.
+    """
+    chip = resolve_chip(chip)
     nx, ny, nz = local_shape
     budget = chip.vmem_bytes * vmem_fraction
     nread = len(desc.inputs)
@@ -75,3 +93,45 @@ def choose_tile(
 def tuned(desc: StencilDescriptor, local_shape, **kw) -> StencilDescriptor:
     """Return the descriptor with its TILE replaced by the tuned choice."""
     return dataclasses.replace(desc, tile=choose_tile(desc, local_shape, **kw).tile)
+
+
+# -- memoized production path ------------------------------------------------
+# One tuned choice per (kernel, local interior, itemsize, chip) signature.
+# Both the serial driver and the simulation farm resolve through here with
+# the same local interior, so they always run the same tile — a requirement
+# of the farm's bitwise-parity contract with serial runs.
+_TILE_CACHE: dict[tuple, TileChoice] = {}
+_TILE_STATS = {"hits": 0, "misses": 0}
+
+
+def tile_for(desc: StencilDescriptor, local_shape: tuple[int, int, int],
+             *, itemsize: int = 4, chip: Chip | str | None = "auto",
+             **kw) -> TileChoice:
+    """Memoized :func:`choose_tile` keyed on the tuning signature.
+
+    The resolved tile flows into the kernel compile-cache key
+    (``ops._kernel``), so the choice is effectively cached alongside the
+    compiled executable: a farm admitting new scalar variants of a seen
+    shape re-reads this cache and recompiles nothing.
+    """
+    chip = resolve_chip(chip)
+    key = (desc.name, desc.stencil, tuple(local_shape), itemsize, chip.name,
+           tuple(sorted(kw.items())))
+    hit = _TILE_CACHE.get(key)
+    if hit is not None:
+        _TILE_STATS["hits"] += 1
+        return hit
+    _TILE_STATS["misses"] += 1
+    choice = choose_tile(desc, tuple(local_shape), itemsize=itemsize,
+                         chip=chip, **kw)
+    _TILE_CACHE[key] = choice
+    return choice
+
+
+def tile_cache_stats() -> dict:
+    return {**_TILE_STATS, "entries": len(_TILE_CACHE)}
+
+
+def reset_tile_cache():
+    _TILE_CACHE.clear()
+    _TILE_STATS.update(hits=0, misses=0)

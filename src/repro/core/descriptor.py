@@ -60,6 +60,14 @@ class StencilDescriptor:
     output tile owned by one kernel instance (the paper's ``TILE="16,16,16"``).
     On TPU the tile maps to the Pallas BlockSpec block shape; cached inputs are
     staged into VMEM as ``tile + stencil`` halo-expanded blocks.
+
+    ``parameters`` declares the kernel's runtime scalars — and, for the
+    3DBLOCK template, the *scalar-prefetch contract*: declaration order is
+    the column order of the generated kernel's scalar table
+    (:meth:`param_index`), the operand that carries array-valued/per-slot
+    parameter values (``pltpu.PrefetchScalarGridSpec`` on real TPU, a
+    leading row-indexed operand in interpret mode).  Values passed as
+    Python scalars are instead baked as trace-time literals.
     """
 
     name: str
@@ -128,6 +136,20 @@ class StencilDescriptor:
             if name in g.names:
                 return g
         raise KeyError(name)
+
+    def param_index(self, name: str) -> int:
+        """Scalar-table column of parameter ``name`` (declaration order).
+
+        The generator packs array-valued runtime parameters into the
+        3DBLOCK scalar-prefetch table in exactly this order, restricted to
+        the parameters that are array-valued at the call site.
+        """
+        try:
+            return self.parameters.index(name)
+        except ValueError:
+            raise KeyError(
+                f"{name!r} is not a declared parameter of kernel "
+                f"{self.name} (have {self.parameters})") from None
 
     def vmem_block_bytes(self, itemsize: int = 4) -> int:
         """VMEM working-set estimate for one kernel instance.

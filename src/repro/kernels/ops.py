@@ -34,9 +34,35 @@ def _kernel(name: str, template: str, interpret: bool, tile: tuple | None):
                     interpret=interpret)
 
 
+def _auto_tile(name: str, arrays: dict) -> tuple:
+    """Roofline-autotuned tile for this kernel's local interior.
+
+    Resolved from the (vmap-invisible) local array shapes, so the farm's
+    slot-batched call and a serial run of the same grid tune identically —
+    the memoized choice lives in ``autotune._TILE_CACHE`` and feeds the
+    ``_kernel`` compile-cache key.
+    """
+    from repro.core import autotune
+
+    desc = stencil3d.DESCRIPTORS[name]
+    first = arrays[desc.inputs[0]]
+    space = tuple(first.shape)
+    if desc.inputs[0] in desc.cached_inputs:
+        space = tuple(s - lo - hi for s, lo, hi in
+                      zip(space, desc.halo_lo, desc.halo_hi))
+    itemsize = jnp.dtype(first.dtype).itemsize
+    return autotune.tile_for(desc, space, itemsize=itemsize).tile
+
+
 def apply_kernel(name: str, arrays: dict, *, template: str | None = None,
-                 interpret: bool = False, tile: tuple | None = None, **params):
+                 interpret: bool = False, tile: tuple | str | None = None,
+                 **params):
+    """Run one descriptor kernel. ``tile`` overrides the descriptor TILE:
+    a concrete 3-tuple, or ``"auto"`` for the chip-aware roofline choice
+    (ignored on the JNP template, which has no tiles)."""
     tmpl = template or default_template()
+    if tile == "auto":
+        tile = _auto_tile(name, arrays) if tmpl == "3DBLOCK" else None
     return _kernel(name, tmpl, interpret, tile)(arrays, **params)
 
 

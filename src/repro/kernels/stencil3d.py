@@ -16,8 +16,12 @@ Grid convention (staggered MAC):
   vz[i,j,k] at z-face     ((i+.5)h, (j+.5)h, (k+1 )h)
 
 All kernels read halo-padded arrays (ghosts filled by the driver's exchange,
-exactly as in Cactus) and write interior arrays.  Runtime parameters (dt, h,
-nu) are static at trace time, mirroring CaCUDA's compile-time parameters.
+exactly as in Cactus) and write interior arrays.  Runtime parameters passed
+as Python scalars (grid geometry like ``h``) are baked as trace-time
+literals, mirroring CaCUDA's compile-time parameters; parameters passed as
+jax arrays/tracers (the per-simulation ``dt``, ``nu``, forcing the farm
+threads through its vmapped step) ride the generator's scalar-table operand
+— scalar prefetch on real TPU — in descriptor-declared column order.
 """
 from __future__ import annotations
 

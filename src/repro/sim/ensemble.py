@@ -26,8 +26,11 @@ Two mesh placements compose (the farm's slots × shards story):
 
 The descriptor-generated kernels batch the same way one level down:
 ``GeneratedKernel.apply_batched`` vmaps the JNP template and gives the
-3DBLOCK Pallas template a leading batch axis in its grid/BlockSpecs; the
-solver-level vmap used here subsumes both for the full CFD step.
+3DBLOCK Pallas template a leading slot axis in its grid/BlockSpecs with
+per-slot scalars routed through the scalar-table operand (scalar prefetch
+on real TPU) — the solver-level vmap used here dispatches to exactly that
+batched expansion via the generator's ``custom_vmap`` rule, so one
+compiled Pallas kernel serves every resident simulation.
 """
 from __future__ import annotations
 
@@ -100,12 +103,6 @@ def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
     vmapped step exchanges ghost zones over them; the result is bitwise
     the serial ``GridDriver`` run of the same decomposition.
     """
-    if solver.config.template == "3DBLOCK":
-        raise NotImplementedError(
-            "the ensemble farm threads per-slot physics as traced scalars, "
-            "which the 3DBLOCK (Pallas) template cannot consume yet — use "
-            "the JNP template for farm runs (Pallas scalar prefetch is a "
-            "ROADMAP item)")
     vstep = jax.vmap(solver._step_local)
 
     def run_k(state, params, k):

@@ -272,6 +272,30 @@ class TestAutotune:
         big = choose_tile(LAP, (64, 64, 512))
         assert big.intensity >= small.intensity
 
+    def test_chip_auto_resolves_running_host(self):
+        """choose_tile's default chip="auto" must resolve the host we are
+        actually on (cpu-host on the CI lane), identical to passing the
+        resolved chip explicitly."""
+        from repro.core.rooflinemodel import resolve_chip
+
+        chip = resolve_chip("auto")
+        assert chip.name == "cpu-host"  # tests run on CPU jax
+        auto = choose_tile(LAP, (32, 64, 256))
+        explicit = choose_tile(LAP, (32, 64, 256), chip=chip)
+        assert auto == explicit
+
+    def test_tile_for_memoizes_per_signature(self):
+        from repro.core import reset_tile_cache, tile_cache_stats, tile_for
+
+        reset_tile_cache()
+        a = tile_for(LAP, (32, 64, 256))
+        b = tile_for(LAP, (32, 64, 256))
+        assert a == b and a.tile is not None
+        stats = tile_cache_stats()
+        assert stats == {"hits": 1, "misses": 1, "entries": 1}
+        tile_for(LAP, (16, 64, 256))  # different interior -> new entry
+        assert tile_cache_stats()["misses"] == 2
+
 
 class TestDriver:
     def test_single_device_driver(self):

@@ -283,6 +283,54 @@ class TestRegressionGate:
         assert not v["passed"]
         assert any("turned 'unparsed'" in f for f in v["failures"])
 
+    def test_baseline_for_other_bench_is_ignored(self):
+        fresh = dict(_bench_doc(tp=10.0), bench="ensemble")
+        v = compare(fresh, _bench_doc(tp=100.0))
+        assert v["passed"]
+        assert any("baseline gates skipped" in w for w in v["warnings"])
+
+    @staticmethod
+    def _pallas_doc(**over):
+        m = {
+            "resolved_backend": "pallas-interpret",
+            "batches": [{"ensemble": 1, "farm_steps_per_s": 100.0},
+                        {"ensemble": 4, "farm_steps_per_s": 300.0}],
+            "parity": {"bitwise_ok": True},
+            "expected_compile_misses": 3,
+            "compile_cache": {"misses": 3, "hits": 1, "entries": 3},
+        }
+        m.update(over)
+        return {"schema": obs.BENCH_SCHEMA, "bench": "ensemble_pallas",
+                "passed": True,
+                "host": {"backend": "cpu", "device_count": 1},
+                "metrics": m}
+
+    def test_pallas_structural_gate_passes_clean_doc(self):
+        v = compare(self._pallas_doc(), None)
+        assert v["passed"], v["failures"]
+
+    def test_pallas_parity_break_fails_without_baseline(self):
+        v = compare(self._pallas_doc(parity={"bitwise_ok": False}), None)
+        assert not v["passed"]
+        assert any("bitwise parity" in f for f in v["failures"])
+
+    def test_pallas_per_scalar_recompile_fails(self):
+        """Five scalars fragmenting into five executables is THE failure
+        mode the scalar table exists to prevent."""
+        v = compare(self._pallas_doc(
+            compile_cache={"misses": 7, "hits": 0, "entries": 7}), None)
+        assert not v["passed"]
+        assert any("per-scalar recompile" in f for f in v["failures"])
+
+    def test_pallas_wrong_backend_fails(self):
+        v = compare(self._pallas_doc(resolved_backend="jnp"), None)
+        assert not v["passed"]
+        assert any("not a pallas backend" in f for f in v["failures"])
+
+    def test_smoke_docs_skip_the_pallas_gate(self):
+        # the structural gate keys on the bench name, not on field absence
+        assert compare(_bench_doc(), None)["passed"]
+
     def test_committed_baseline_is_valid(self):
         """The file CI gates against must itself load, validate, and
         carry a well-formed perf block."""

@@ -178,6 +178,138 @@ class TestTaylorGreenEnsemble:
                 np.testing.assert_array_equal(ref[f], results[sid].state[f])
 
 
+# the Pallas farm posture: 3DBLOCK tiles through the interpreter (the CPU
+# correctness mode of the TPU path), overlap off as BACKENDS resolves it
+PKW = dict(jacobi_iters=20, template="3DBLOCK", interpret=True,
+           overlap=False)
+
+
+class TestPallasFarmParity:
+    """The farm's Pallas backend: per-slot scalars through the generator's
+    scalar table (scalar prefetch on hardware), one compiled 3DBLOCK
+    kernel for every slot.
+
+    Contract: a ``pallas-interpret`` farm run is BITWISE the
+    pallas-interpret *serial* run of the same request — slots carry
+    heterogeneous nu/dt/lid scalars, so any literal-baking regression
+    (slot 0's physics smeared over the batch, or one kernel per scalar
+    tuple) shows immediately — and matches the JNP farm to fp tolerance
+    (separately compiled XLA programs contract FMAs differently; the
+    cross-template contract was always tolerance-level, as in
+    ``tests/test_kernels.py``)."""
+
+    RES = (50.0, 200.0, 400.0)
+    STEPS = (12, 8, 15)
+
+    def _serial(self, cfg, steps):
+        solver = NavierStokes3D(cfg)
+        state = solver.init_state()
+        step = solver.make_step()
+        for _ in range(steps):
+            state = step(state)
+        return jax.device_get(state)
+
+    @pytest.fixture(scope="class")
+    def cavity_farms(self):
+        """The same heterogeneous requests through a pallas-interpret farm
+        and a JNP farm (2 slots serving 3 sims: a reclamation happens)."""
+        out = {}
+        for kw in (PKW, KW):
+            farm = SimulationFarm(cavity.config(N, **kw), n_slots=2)
+            sids = {farm.submit(cavity.sim_request(N, re=re, steps=st, **kw)):
+                    (re, st) for re, st in zip(self.RES, self.STEPS)}
+            results = farm.run_until_drained()
+            out[kw["template"] if "template" in kw else "JNP"] = (sids, results)
+        return out
+
+    def test_cavity_farm_bitwise_vs_pallas_serial(self, cavity_farms):
+        sids, results = cavity_farms["3DBLOCK"]
+        for sid, (re, st) in sids.items():
+            res = results[sid]
+            assert res.terminated == "steps", (res.terminated, res.error)
+            ref = self._serial(cavity.config(N, re=re, **PKW), st)
+            for f in FIELDS:
+                np.testing.assert_array_equal(
+                    ref[f], res.state[f], err_msg=f"re={re} field={f}")
+
+    def test_cavity_farm_matches_jnp_farm(self, cavity_farms):
+        psids, pres = cavity_farms["3DBLOCK"]
+        jsids, jres = cavity_farms["JNP"]
+        by_req_p = {k: pres[s] for s, k in psids.items()}
+        for sid, key in jsids.items():
+            for f in FIELDS:
+                np.testing.assert_allclose(
+                    jres[sid].state[f], by_req_p[key].state[f],
+                    rtol=2e-5, atol=1e-6, err_msg=f"req={key} field={f}")
+
+    def test_taylor_green_heterogeneous_nu_and_dt_bitwise(self):
+        """Distinct nu AND dt per slot — dt multiplies every kernel's
+        update, so a scalar table that indexed the wrong row (or baked
+        slot 0's literals) cannot pass."""
+        base = taylor_green.config(N, nu=0.1, dt=1e-3, **PKW)
+        farm = SimulationFarm(base, n_slots=3)
+        runs = ((0.05, 1.0e-3), (0.1, 0.5e-3), (0.2, 0.25e-3))
+        sids = {farm.submit(taylor_green.sim_request(
+            N, nu=nu, dt=dt, steps=10, **PKW)): (nu, dt)
+            for nu, dt in runs}
+        results = farm.run_until_drained()
+        for sid, (nu, dt) in sids.items():
+            res = results[sid]
+            assert res.terminated == "steps", (res.terminated, res.error)
+            ref = self._serial(taylor_green.config(N, nu=nu, dt=dt, **PKW),
+                               10)
+            for f in FIELDS:
+                np.testing.assert_array_equal(
+                    ref[f], res.state[f], err_msg=f"nu={nu} dt={dt} {f}")
+
+    def test_evict_readmit_cycle_bitwise(self):
+        svc = SimulationService(cavity.config(N, **PKW), n_slots=2)
+        a = svc.submit(cavity.sim_request(N, re=100.0, steps=24, **PKW))
+        b = svc.submit(cavity.sim_request(N, re=200.0, steps=24, **PKW))
+        c = svc.submit(cavity.sim_request(N, re=300.0, steps=6, **PKW))
+        svc.run(6)
+        assert svc.evict(a)
+        assert svc.poll(a)["status"] == "evicted"
+        ra = svc.result(a)            # readmits and runs to completion
+        assert ra.steps_done == 24
+        ref = self._serial(cavity.config(N, re=100.0, **PKW), 24)
+        for f in FIELDS:
+            np.testing.assert_array_equal(ref[f], ra.state[f], err_msg=f)
+        assert svc.result(b).steps_done == 24
+        assert svc.result(c).steps_done == 6
+
+    def test_one_compile_for_heterogeneous_scalars(self):
+        """Scalar values must not fragment the compile cache: five
+        Reynolds variants through a pallas farm are ONE executable."""
+        reset_compile_cache()
+        farm = SimulationFarm(cavity.config(N, **PKW), n_slots=2)
+        for re in (70.0, 120.0, 180.0, 220.0, 260.0):
+            farm.submit(cavity.sim_request(N, re=re, steps=3, **PKW))
+        results = farm.run_until_drained()
+        assert all(r.terminated == "steps" for r in results.values())
+        stats = compile_cache_stats()
+        assert stats["misses"] == 1 and stats["entries"] == 1
+
+    def test_serial_and_farm_share_autotuned_tiles(self):
+        """The roofline tile is resolved per (kernel, local interior,
+        chip) and memoized: the farm's batched step re-reads the serial
+        path's choices (zero extra misses) — the invariant behind the
+        bitwise contract above."""
+        from repro.core import reset_tile_cache, tile_cache_stats
+
+        reset_compile_cache()
+        reset_tile_cache()
+        self._serial(cavity.config(N, re=100.0, **PKW), 1)
+        after_serial = tile_cache_stats()
+        assert after_serial["misses"] > 0          # the tuner really ran
+        farm = SimulationFarm(cavity.config(N, **PKW), n_slots=2)
+        farm.submit(cavity.sim_request(N, re=150.0, steps=2, **PKW))
+        farm.run_until_drained()
+        after_farm = tile_cache_stats()
+        assert after_farm["misses"] == after_serial["misses"]
+        assert after_farm["hits"] > after_serial["hits"]
+
+
 class TestEnsembleExecutor:
     def test_write_read_clear_slots(self):
         ex = EnsembleExecutor(cavity.config(N, **KW), n_slots=3)
@@ -321,14 +453,55 @@ class TestBatchedKernelTemplates:
         np.testing.assert_allclose(np.asarray(got["p"]),
                                    np.asarray(want["p"]), atol=1e-6)
 
-    def test_pallas_batched_rejects_per_slot_params(self):
+    def test_pallas_batched_per_slot_params_bitwise(self):
+        """Per-slot scalars through the 3DBLOCK scalar table (the path the
+        farm's vmapped step rides): each slot's row must reproduce the
+        serial operand-table call bit-for-bit."""
         desc = stencil3d.DESCRIPTORS["JACOBI_PRESSURE"]
         pallas = generate(desc, stencil3d.BODIES["JACOBI_PRESSURE"],
                           template="3DBLOCK", interpret=True)
-        with pytest.raises(NotImplementedError):
+        nslots, shape = 3, (8, 8, 8)
+        p = self._arrays(nslots, shape, 1, seed=7)
+        rhs = self._arrays(nslots, shape, 0, seed=8)
+        omegas = jnp.asarray([0.7, 0.9, 1.1], jnp.float32)
+        out = pallas.apply_batched({"p": p, "rhs": rhs}, h=0.1, omega=omegas,
+                                   batched_params=("omega",))
+        for s in range(nslots):
+            ref = pallas({"p": p[s], "rhs": rhs[s]}, h=0.1, omega=omegas[s])
+            np.testing.assert_array_equal(np.asarray(ref["p"]),
+                                          np.asarray(out["p"][s]))
+
+    def test_pallas_vmap_dispatches_to_batched_grid(self):
+        """jax.vmap of the kernel call (exactly what make_ensemble_step
+        does to the solver step) hits the custom_vmap rule and matches
+        apply_batched bitwise — under jit, with traced scalars."""
+        desc = stencil3d.DESCRIPTORS["JACOBI_PRESSURE"]
+        pallas = generate(desc, stencil3d.BODIES["JACOBI_PRESSURE"],
+                          template="3DBLOCK", interpret=True)
+        nslots, shape = 3, (8, 8, 8)
+        p = self._arrays(nslots, shape, 1, seed=9)
+        rhs = self._arrays(nslots, shape, 0, seed=10)
+        omegas = jnp.asarray([0.7, 0.9, 1.1], jnp.float32)
+
+        @jax.jit
+        def farm_like(ps, rs, oms):
+            return jax.vmap(
+                lambda p1, r1, om: pallas({"p": p1, "rhs": r1},
+                                          h=0.1, omega=om)["p"])(ps, rs, oms)
+
+        want = pallas.apply_batched({"p": p, "rhs": rhs}, h=0.1,
+                                    omega=omegas, batched_params=("omega",))
+        np.testing.assert_array_equal(np.asarray(farm_like(p, rhs, omegas)),
+                                      np.asarray(want["p"]))
+
+    def test_pallas_batched_non_array_per_slot_param_rejected(self):
+        desc = stencil3d.DESCRIPTORS["JACOBI_PRESSURE"]
+        pallas = generate(desc, stencil3d.BODIES["JACOBI_PRESSURE"],
+                          template="3DBLOCK", interpret=True)
+        with pytest.raises(ValueError, match="array-valued"):
             pallas.apply_batched({"p": jnp.zeros((2, 10, 10, 10)),
                                   "rhs": jnp.zeros((2, 8, 8, 8))},
-                                 h=0.1, omega=jnp.ones((2,)),
+                                 h=0.1, omega=0.9,
                                  batched_params=("omega",))
 
 
@@ -538,6 +711,51 @@ print("2D DECOMP OK")
 """
         out = run_with_devices(script, n_devices=8, timeout=540)
         assert "2D DECOMP OK" in out
+
+    def test_pallas_slot_shard_farm_bitwise_vs_serial(self):
+        """The full posture the tentpole unlocks: 3DBLOCK Pallas kernels
+        (interpret mode), per-slot scalars through the generator's scalar
+        table, grid decomposition per slot, slot parallelism on top —
+        bitwise the serial decomposed pallas-interpret run."""
+        script = """
+import jax, numpy as np
+from repro.cfd import cavity
+from repro.cfd.ns3d import NavierStokes3D
+from repro.launch.mesh import make_mesh
+from repro.sim import SimulationFarm
+
+N = 16
+KW = dict(jacobi_iters=20, template="3DBLOCK", interpret=True,
+          overlap=False, decomposition=((0, "shard"),))
+RES = (100.0, 250.0, 400.0)
+STEPS = (8, 12, 6)
+
+def serial(re, steps):
+    solver = NavierStokes3D(cavity.config(N, re=re, **KW),
+                            make_mesh((4,), ("shard",)))
+    state = solver.init_state()
+    step = solver.make_step()
+    for _ in range(steps):
+        state = step(state)
+    return jax.device_get(state)
+
+mesh = make_mesh((2, 4), ("slot", "shard"))
+farm = SimulationFarm(cavity.config(N, **KW), n_slots=2, mesh=mesh,
+                      slot_axis="slot")
+sids = {farm.submit(cavity.sim_request(N, re=re, steps=s, **KW)): (re, s)
+        for re, s in zip(RES, STEPS)}
+results = farm.run_until_drained()
+for sid, (re, steps) in sids.items():
+    res = results[sid]
+    assert res.terminated == "steps", (res.terminated, res.error)
+    ref = serial(re, steps)
+    for f in ("vx", "vy", "vz", "p"):
+        np.testing.assert_array_equal(ref[f], res.state[f],
+                                      err_msg=f"re={re} {f}")
+print("PALLAS SLOT-SHARD OK")
+"""
+        out = run_with_devices(script, n_devices=8, timeout=540)
+        assert "PALLAS SLOT-SHARD OK" in out
 
 
 @pytest.mark.multidevice

@@ -41,6 +41,14 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "baselines", "BENCH_smoke.json")
 THROUGHPUT_KEYS = ("steady_sim_steps_per_s", "sim_steps_per_s")
 UTIL_COLLAPSE = 0.5          # fresh utilization < 50% of baseline -> fail
+# the health monitor's modeled steady-state cost (one diagnostics pass
+# amortized over the check_steady_every steps its chunk covers, priced
+# by the HLO cost model on the real lowered executables) must stay
+# within 3% of the health-off step cost.  Deterministic, so it gates
+# baseline-free on any host — unlike a wall-clock ratio of two
+# separately compiled programs, which carries several-percent
+# process-level layout variance and would make a 3% gate a coin flip.
+HEALTH_OVERHEAD = 0.03
 
 
 def _throughput(doc: dict) -> tuple[float | None, str | None]:
@@ -103,10 +111,22 @@ def explain(base_row: dict, fresh_row: dict) -> list[str]:
 
 
 def structural_failures(fresh: dict) -> list[str]:
-    """Host-independent invariants of the Pallas ensemble bench
-    (``BENCH_ensemble_pallas.json``) — gated without any baseline, on any
-    machine: the farm really ran the Pallas template, stayed bitwise with
-    serial, and compiled exactly one executable per static signature."""
+    """Host-independent invariants, gated without any baseline, on any
+    machine.
+
+    ``ensemble_pallas``: the farm really ran the Pallas template, stayed
+    bitwise with serial, and compiled exactly one executable per static
+    signature.  ``smoke``: the health monitor's modeled steady-state
+    cost within ``HEALTH_OVERHEAD`` of the health-off step, and ring
+    drains exactly on the harvest cadence.  ``health_smoke``: the
+    NaN-injection quarantine
+    actually quarantined, kept the healthy slots, and left a readable
+    flight record.
+    """
+    if fresh.get("bench") == "smoke":
+        return _smoke_health_failures(fresh)
+    if fresh.get("bench") == "health_smoke":
+        return _health_smoke_failures(fresh)
     if fresh.get("bench") != "ensemble_pallas":
         return []
     m = fresh.get("metrics", {})
@@ -131,6 +151,70 @@ def structural_failures(fresh: dict) -> list[str]:
             f"ensemble_pallas: {misses} compile misses, expected "
             f"{m.get('expected_compile_misses')} — not one executable per "
             "static signature (per-scalar recompile regression?)")
+    return fails
+
+
+def _smoke_health_failures(fresh: dict) -> list[str]:
+    """Health-overhead gate inside one smoke artifact, baseline-free.
+
+    Two deterministic invariants: the modeled steady-state cost of the
+    monitor (``health.model.modeled_overhead`` — one diagnostics pass
+    amortized over its chunk, priced by the HLO cost model on both
+    farms' real lowered executables) within ``HEALTH_OVERHEAD``, and
+    ring drains landing exactly on the harvest cadence (zero extra host
+    syncs).  The wall-clock pair ``steady_sim_steps_per_s_checked`` /
+    ``_health`` stays recorded in the artifact for humans but is not
+    gated — see :func:`repro.obs.perf.health_overhead_model`.  Older
+    artifacts without a health block pass untouched (bootstrap); an
+    artifact that records health throughput but no model fails, so the
+    model cannot be dropped silently."""
+    m = fresh.get("metrics", {})
+    fails = []
+    if "health" not in m:
+        return fails
+    h = m.get("health", {})
+    model = h.get("model")
+    if not model:
+        if m.get("steady_sim_steps_per_s_health"):
+            fails.append("smoke: health throughput recorded but no "
+                         "health.model block — the cost-model gate was "
+                         "dropped")
+        return fails
+    if model.get("status") != "ok":
+        fails.append(f"smoke: health cost model unparsed "
+                     f"({model.get('error')}) — overhead cannot be gated")
+    elif model.get("modeled_overhead", 1.0) > HEALTH_OVERHEAD:
+        fails.append(
+            f"smoke: modeled health overhead "
+            f"{100 * model['modeled_overhead']:.2f}% exceeds the "
+            f"{100 * HEALTH_OVERHEAD:.0f}% bound — the diagnostics pass "
+            f"moves {model.get('hbm_bytes_diag_per_chunk'):.3g} HBM "
+            f"bytes per chunk against a "
+            f"{model.get('hbm_bytes_step'):.3g}-byte step (heavier "
+            "diagnostics, or a shorter check_steady_every cadence?)")
+    if h.get("drains") != h.get("boundaries"):
+        fails.append(
+            f"smoke: {h.get('drains')} health drains over "
+            f"{h.get('boundaries')} harvest boundaries — the ring is "
+            "not draining exactly on the check_steady_every cadence")
+    return fails
+
+
+def _health_smoke_failures(fresh: dict) -> list[str]:
+    m = fresh.get("metrics", {})
+    fails = []
+    if m.get("quarantined") is not True:
+        fails.append("health_smoke: the poisoned sim was not quarantined "
+                     "(no terminated='diverged' result)")
+    if m.get("healthy_done") is not True:
+        fails.append("health_smoke: a healthy sim did not finish — "
+                     "quarantine leaked into other slots")
+    if m.get("flight_record_ok") is not True:
+        fails.append("health_smoke: flight record missing or unreadable")
+    if m.get("drains") != m.get("boundaries"):
+        fails.append(
+            f"health_smoke: {m.get('drains')} drains over "
+            f"{m.get('boundaries')} boundaries — extra host syncs")
     return fails
 
 

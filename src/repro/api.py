@@ -113,6 +113,13 @@ class RuntimeConfig:
     # repro.obs.TelemetryConfig / Telemetry, or a TelemetryConfig kwargs
     # dict ({"trace_path": ...}); see repro.obs.resolve
     telemetry: Any = False
+    # in-situ health monitoring + NaN quarantine on the farm path: False
+    # (default: the pre-health executable, nothing compiled in), True, a
+    # repro.obs.HealthConfig, or a HealthConfig kwargs dict
+    # ({"div_diverged": 1e6, "flight_dir": ...}); flight records default
+    # under <ckpt_dir>/flight when a checkpoint dir is set.  Independent
+    # of `telemetry` — quarantine is functional, not instrumentation.
+    health: Any = False
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -188,6 +195,13 @@ class Runtime:
         # farm metrics, per-sim traces); NULL when disabled, making every
         # hook a no-op on the default path
         self.telemetry = obs.resolve(self.config.telemetry)
+        health = obs.resolve_health(self.config.health)
+        if (health is not None and health.flight_dir is None
+                and self.config.ckpt_dir is not None):
+            health = dataclasses.replace(
+                health,
+                flight_dir=os.path.join(self.config.ckpt_dir, "flight"))
+        self.health = health
         self._mesh = mesh                  # explicit mesh wins over shape
         self._mesh_built = mesh is not None
         self._services: dict[tuple, SimulationService] = {}
@@ -331,7 +345,7 @@ class Runtime:
                 cfg, n_slots=self.config.n_slots, ckpt_dir=ckpt,
                 check_steady_every=self.config.check_every,
                 mesh=self.mesh, slot_axis=self.config.slot_axis,
-                telemetry=self.telemetry,
+                telemetry=self.telemetry, health=self.health,
                 farm_id=f"{cfg.case}/sig{len(self._services):03d}")
         except Exception as e:
             return None, f"{type(e).__name__}: {e}"
@@ -439,6 +453,42 @@ class Runtime:
                "steps": result.steps_done}
         return sc.analyze(solver, result.state, ctx)
 
+    def watch(self, refresh_s: float | None = None,
+              iterations: int | None = None) -> str:
+        """Live per-slot health dashboard over every resolved farm
+        (Cactus-HTTPD style, as text).
+
+        Called bare it renders and returns one frame — slot occupancy,
+        per-sim progress, latest health state/diagnostics, queue depth.
+        With ``refresh_s`` it also prints the frame and re-renders every
+        ``refresh_s`` seconds until the farms go idle (or ``iterations``
+        frames have printed), returning the last frame — run it from a
+        second thread, or interleave with ``services()[i].run(...)``
+        from a drive loop.
+        """
+        from repro.obs.health import render_dashboard
+
+        def frame() -> str:
+            return render_dashboard(
+                [svc.farm.health_snapshot()
+                 for svc in self._services.values()])
+
+        if refresh_s is None:
+            return frame()
+        import time
+
+        n, text = 0, frame()
+        while True:
+            text = frame()
+            print(text, flush=True)
+            n += 1
+            if iterations is not None and n >= iterations:
+                break
+            if all(svc.farm.table.idle for svc in self._services.values()):
+                break
+            time.sleep(refresh_s)
+        return text
+
     # -- introspection --------------------------------------------------------
     def device_steps(self) -> int:
         """Total device dispatch steps across every resolved farm."""
@@ -471,13 +521,15 @@ def runtime(n: int = 32, *, backend: str = "jnp", mesh_shape: tuple = (),
             slot_axis: str = "slot", n_slots: int = 4,
             ckpt_dir: str | None = None, check_every: int = 16,
             nz: int | None = None, mesh: jax.sharding.Mesh | None = None,
-            telemetry: Any = False, **solver) -> Runtime:
+            telemetry: Any = False, health: Any = False,
+            **solver) -> Runtime:
     """Build a :class:`Runtime` — the one-call front door.
 
-    >>> rt = repro.api.runtime(n=32, telemetry=True)
+    >>> rt = repro.api.runtime(n=32, telemetry=True, health=True)
     >>> res = rt.run("cavity", t_end=5.0, re=100.0)
     >>> res.diagnostics["ghia"]
     >>> print(rt.report())        # Cactus-style timers + farm metrics
+    >>> print(rt.watch())         # live per-slot health dashboard
     """
     cfg = RuntimeConfig(n=n, nz=nz, backend=backend,
                         mesh_shape=tuple(mesh_shape),
@@ -485,5 +537,6 @@ def runtime(n: int = 32, *, backend: str = "jnp", mesh_shape: tuple = (),
                         decomposition=tuple(decomposition),
                         slot_axis=slot_axis, n_slots=n_slots,
                         ckpt_dir=ckpt_dir, check_every=check_every,
-                        solver=dict(solver), telemetry=telemetry)
+                        solver=dict(solver), telemetry=telemetry,
+                        health=health)
     return Runtime(cfg, mesh=mesh)

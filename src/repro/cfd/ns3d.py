@@ -95,6 +95,12 @@ def params_from_config(c: CFDConfig) -> dict:
 # (repro.sim.scenarios), not by the solver.
 PERIODIC_CASES = ("taylor_green", "kelvin_helmholtz")
 
+# Physics columns of one in-situ health frame, in the order
+# ``health_diagnostics`` stacks them.  ``obs.health.DIAG_COLUMNS`` is
+# ``("step", *HEALTH_DIAGS)`` — duplicated (not imported) so the solver
+# owes nothing to the obs package; a test pins the two tuples.
+HEALTH_DIAGS = ("div_linf", "ke", "umax", "cfl", "finite")
+
 
 class NavierStokes3D:
     """The CFD application object: owns the driver, BCs, and the step."""
@@ -111,6 +117,7 @@ class NavierStokes3D:
             periodic=(periodic, periodic, True),
         )
         self.driver = GridDriver(self.domain, mesh)
+        self._health_jit = None   # lazy fused health_report executable
         self._build_bcs()
 
     @property
@@ -322,3 +329,94 @@ class NavierStokes3D:
     def kinetic_energy(self, state: dict) -> float:
         return float(0.5 * sum(jnp.mean(state[f] ** 2)
                                for f in ("vx", "vy", "vz")))
+
+    def health_diagnostics(self, state: dict,
+                           params: dict | None = None) -> jnp.ndarray:
+        """One fused ``(len(HEALTH_DIAGS),)`` f32 vector of in-situ health
+        diagnostics: divergence L∞, kinetic energy, max|u|, CFL number,
+        and a finite-fields sentinel (1.0 = no NaN/Inf in any dynamic
+        field — the velocities and the pressure).
+
+        Local-block semantics like ``_step_local``: the stencil is
+        ghost-free (interior slicing) and reductions finish with
+        ``pmax``/``pmin``/``pmean`` over the decomposition axes, so the
+        same function runs serially, vmapped over farm slots, and inside
+        ``shard_map`` — with zero halo traffic of its own.  Read-only
+        (no state writes): compiling it alongside the step cannot
+        perturb the step's numerics.
+        """
+        c = self.config
+        if params is None:
+            params = params_from_config(c)
+        axes = tuple(self.domain.decomposition.values())
+
+        def gmax(x):
+            return lax.pmax(x, axes) if axes else x
+
+        def seqmax(x):
+            # sequential per-axis maxes: XLA:CPU lowers one multi-axis
+            # (or flattened) NaN-propagating max-reduce to a scalar loop,
+            # which is ~3x slower than chained single-axis reduces; this
+            # runs inside every farm chunk, so the lowering matters
+            for _ in range(3):
+                x = x.max(axis=-1)
+            return x
+
+        # interior one-sided divergence: identical to the ghost-padded
+        # stencil on every cell that has real (non-BC) neighbors, but it
+        # is pure slicing — no padded field copies, no halo traffic, one
+        # fused kernel.  A blow-up is a volume phenomenon; the skipped
+        # boundary planes cannot hide one from the L-inf
+        vx, vy, vz = state["vx"], state["vy"], state["vz"]
+        div = ((vx[1:, 1:, 1:] - vx[:-1, 1:, 1:])
+               + (vy[1:, 1:, 1:] - vy[1:, :-1, 1:])
+               + (vz[1:, 1:, 1:] - vz[1:, 1:, :-1])) / c.h
+        div_linf = gmax(seqmax(jnp.abs(div)))
+        # max|u| as ONE volume reduce over the elementwise 3-field max
+        # (equal to the max of per-field maxes, at a third of the reduce)
+        umax = gmax(seqmax(jnp.maximum(jnp.maximum(jnp.abs(vx),
+                                                   jnp.abs(vy)),
+                                       jnp.abs(vz))))
+        ke2 = vx * vx + vy * vy + vz * vz
+        for _ in range(3):      # sequential per-axis sums like _global_mean
+            ke2 = ke2.sum(axis=-1)
+        ke = 0.5 * ke2 / np.prod(np.asarray(vx.shape[-3:], np.float32))
+        if axes:
+            ke = lax.pmean(ke, axes)
+        cfl = umax * params["dt"] / c.h
+        # sentinel without boolean volume reduces: NaN/Inf in any velocity
+        # poisons umax or ke (max and sum both propagate non-finites); the
+        # pressure — untouched by the three stats above — contributes one
+        # cheap mean-of-field sum
+        psum = state["p"]
+        for _ in range(3):
+            psum = psum.sum(axis=-1)
+        finite = jnp.isfinite(div_linf + ke + umax + psum)
+        finite = finite.astype(jnp.float32)
+        if axes:
+            finite = lax.pmin(finite, axes)
+        return jnp.stack([div_linf, ke, umax, cfl, finite]
+                         ).astype(jnp.float32)
+
+    def health_report(self, state: dict) -> dict:
+        """Named health diagnostics of ``state`` as plain floats — ONE
+        fused dispatch and ONE host fetch, however many numbers come
+        back (the lazy replacement for per-diagnostic ``float(...)``
+        host syncs in analysis code)."""
+        fields = [state[f] for f in self.FIELDS]
+        if self._health_jit is None:
+            def local(vx, vy, vz, p):
+                return self.health_diagnostics(
+                    {"vx": vx, "vy": vy, "vz": vz, "p": p})
+
+            if self.driver.mesh is None:
+                self._health_jit = jax.jit(local)
+            else:
+                from jax.sharding import PartitionSpec
+
+                spec = self.domain.pspec()
+                self._health_jit = jax.jit(jax.shard_map(
+                    local, mesh=self.driver.mesh, in_specs=(spec,) * 4,
+                    out_specs=PartitionSpec(), check_vma=False))
+        vec = np.asarray(self._health_jit(*fields))
+        return {k: float(v) for k, v in zip(HEALTH_DIAGS, vec)}

@@ -138,6 +138,18 @@ class Checkpointer:
                               ignore_errors=True)
 
     # -- restore ---------------------------------------------------------------
+    def read_arrays(self, step: int) -> tuple[dict, list[np.ndarray]]:
+        """``(manifest, leaves)`` of a saved step, raw — host arrays in
+        flattened-tree order, no target template required.  For readers
+        that rebuild structure from their own sidecar metadata (e.g. the
+        health flight recorder) instead of a live solver tree."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        return manifest, [data[f"leaf_{i}"]
+                          for i in range(manifest["n_leaves"])]
+
     def restore(self, step: int, target_tree, shardings=None):
         """Restore into the structure of ``target_tree`` (shapes/dtypes
         validated).  ``shardings``: optional pytree of Shardings — arrays

@@ -121,6 +121,11 @@ class Schedule:
             return run
 
         tel, bname = telemetry, canonical_bin(bin)
+        # ANALYSIS routines may return lazy device scalars (the health-
+        # diagnostics contract: build on device, fetch once at the end) —
+        # fencing after every entry would serialize their dispatch, so
+        # the ANALYSIS bin fences once when the whole bin is composed
+        per_entry_fence = bname != "ANALYSIS"
 
         def run(state: State) -> State:
             with tel.section(f"schedule.{bname}"):
@@ -128,7 +133,10 @@ class Schedule:
                     with tel.section(e.name), \
                             tel.named_scope(f"{bname}.{e.name}"):
                         state = e.fn(state)
-                        tel.fence(state)
+                        if per_entry_fence:
+                            tel.fence(state)
+                if not per_entry_fence:
+                    tel.fence(state)
             return state
 
         run.__name__ = f"schedule_{bname}"

@@ -40,15 +40,22 @@ from repro.obs.bench import (
     SCHEMA as BENCH_SCHEMA, host_info, load_bench, make_bench_doc,
     validate_bench, write_bench,
 )
+from repro.obs.health import (
+    DIAG_COLUMNS, FlightRecorder, HealthConfig, HealthMonitor,
+    load_flight_record, render_dashboard, resolve_health,
+)
 from repro.obs.metrics import Histogram, Registry, series_key
 from repro.obs.timers import TimerNode, TimerTree
 from repro.obs.trace import TraceLog, validate_chrome_trace
 
 __all__ = [
-    "BENCH_SCHEMA", "Histogram", "NULL", "Registry", "Telemetry",
+    "BENCH_SCHEMA", "DIAG_COLUMNS", "FlightRecorder", "HealthConfig",
+    "HealthMonitor", "Histogram", "NULL", "Registry", "Telemetry",
     "TelemetryConfig", "TimerNode", "TimerTree", "TraceLog", "host_info",
-    "load_bench", "make_bench_doc", "report", "resolve", "series_key",
-    "telemetry", "validate_bench", "validate_chrome_trace", "write_bench",
+    "load_bench", "load_flight_record", "make_bench_doc",
+    "render_dashboard", "report", "resolve", "resolve_health",
+    "series_key", "telemetry", "validate_bench", "validate_chrome_trace",
+    "write_bench",
 ]
 
 _NULL_CM = contextlib.nullcontext()

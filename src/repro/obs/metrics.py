@@ -126,6 +126,20 @@ class Registry:
                 h = self._hists[key] = Histogram()
             h.observe(value)
 
+    def remove(self, name: str, **labels) -> bool:
+        """Drop a series outright (any kind); True if it existed.
+
+        Long-lived registries otherwise accumulate dead per-entity
+        series — the health monitor retires its per-sim state gauge
+        here when a sim leaves the farm.
+        """
+        key = series_key(name, labels)
+        removed = False
+        with self._lock:
+            for store in (self._counters, self._gauges, self._hists):
+                removed |= store.pop(key, None) is not None
+        return removed
+
     # -- reading --------------------------------------------------------------
     def get(self, name: str, **labels):
         """Counter/gauge value or Histogram for a series; None if absent."""

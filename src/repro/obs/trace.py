@@ -24,6 +24,11 @@ import time
 # event kinds that end a residency span opened by "admit"
 _SPAN_ENDS = ("result", "evict")
 
+# health-vocabulary events (state transitions, watchdog marks,
+# quarantines) get their own Chrome-trace process track so the health
+# timeline reads separately from the lifecycle instants
+_HEALTH_PID = 3
+
 
 class TraceLog:
     """Append-only event log with monotonic timestamps and sequence ids.
@@ -93,7 +98,8 @@ class TraceLog:
             out.append({
                 "name": ev["kind"],
                 "ph": "i", "s": "p",        # instant, process-scoped
-                "ts": ts_us, "pid": 1,
+                "ts": ts_us,
+                "pid": _HEALTH_PID if ev["kind"] == "health" else 1,
                 "tid": sid if sid is not None else 0,
                 "args": args,
             })
@@ -117,6 +123,8 @@ class TraceLog:
              "args": {"name": "simulations"}},
             {"name": "process_name", "ph": "M", "pid": 2, "ts": 0,
              "args": {"name": "farm slots"}},
+            {"name": "process_name", "ph": "M", "pid": _HEALTH_PID, "ts": 0,
+             "args": {"name": "health"}},
         ]
         return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
 

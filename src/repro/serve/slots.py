@@ -83,6 +83,12 @@ class SlotTable:
     def free_slots(self) -> Iterator[int]:
         return (s for s, e in enumerate(self._entries) if e is None)
 
+    def slots(self) -> tuple:
+        """Fixed-order occupancy view: one element per slot, ``None`` for
+        a free slot — what a dashboard renders (``occupied()`` skips free
+        slots, which a live per-slot view must not)."""
+        return tuple(self._entries)
+
     def occupied(self) -> Iterator[tuple[int, Any]]:
         return ((s, e) for s, e in enumerate(self._entries) if e is not None)
 

@@ -35,6 +35,7 @@ compiled Pallas kernel serves every resident simulation.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +44,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.cfd.ns3d import PARAM_KEYS, CFDConfig, NavierStokes3D
+from repro.obs.health import N_DIAG
 
 
 def stack_trees(trees):
@@ -88,10 +90,30 @@ def plan_decomposition(config: CFDConfig, mesh,
 
 
 def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
-                       slot_axis: str = "data", n_slots: int | None = None):
+                       slot_axis: str = "data", n_slots: int | None = None,
+                       health_window: int = 0):
     """The compiled ensemble executable for ``solver``'s configuration:
     ``run_k(state, params, k)`` advances the whole slot batch ``k`` steps
     (``k`` is a traced scalar — one compile covers every chunk size).
+
+    With ``health_window=K > 0`` the executable becomes
+    ``run_k(state, params, ring, k) -> (state, ring)``: after the ``k``
+    inner steps the solver's fused ``health_diagnostics`` run ONCE on
+    the chunk's final slot batch and shift into the device-side
+    ``(slots, K, N_DIAG)`` ring buffer as its newest row (the oldest
+    rolls off; frame column 0 is a sentinel the executor stamps with
+    the absolute device step host-side when the ring is read, so the
+    device carries no step counter and the dispatch ships no extra
+    scalars).  Sampling per chunk — not per step — is
+    what keeps the monitor's steady-state cost a vanishing fraction of
+    the chunk: NaN/Inf and divergence persist in the fields, and the
+    farm only acts on frames at its harvest boundaries anyway, so a
+    chunk-end sample detects exactly what a per-step sample would.  The
+    diagnostics are read-only reductions on the *output* of the step —
+    they feed nothing back into the fields — so health-on state
+    trajectories are bitwise the health-off ones, and the ring rides to
+    the host only when the farm drains it at a harvest boundary (zero
+    extra steady-state syncs).
 
     With ``mesh``, the slot axis is placed over the ``slot_axis``
     data-parallel mesh axis (vmap × shard_map): each device advances its
@@ -105,8 +127,26 @@ def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
     """
     vstep = jax.vmap(solver._step_local)
 
-    def run_k(state, params, k):
-        return lax.fori_loop(0, k, lambda _, s: vstep(s, params), state)
+    if health_window:
+        vdiag = jax.vmap(solver.health_diagnostics)
+        K = int(health_window)
+
+        def run_k(state, params, ring, k):
+            state = lax.fori_loop(
+                0, k, lambda _, s: vstep(s, params), state)
+            d = vdiag(state, params)              # (slots, N_DIAG - 1)
+            # column 0 is the step stamp — written host-side on read;
+            # on device it only needs to be "not the -1 blank sentinel"
+            col = jnp.zeros((d.shape[0], 1), d.dtype)
+            row = jnp.concatenate([col, d], axis=1)[:, None, :]
+            # shift-append: newest frame last, oldest rolls off — no
+            # cursor operand, rows arrive at the host already ordered
+            ring = jnp.concatenate([ring[:, 1:], row.astype(ring.dtype)],
+                                   axis=1)
+            return state, ring
+    else:
+        def run_k(state, params, k):
+            return lax.fori_loop(0, k, lambda _, s: vstep(s, params), state)
 
     if mesh is None:
         return jax.jit(run_k)
@@ -124,8 +164,15 @@ def make_ensemble_step(solver: NavierStokes3D, *, mesh=None,
                                      slot_axis=slot_axis)
     else:
         state_spec = sp
-    fn = jax.shard_map(run_k, mesh=mesh, in_specs=(state_spec, sp, P()),
-                       out_specs=state_spec, check_vma=False)
+    if health_window:
+        # the ring partitions its leading slot axis exactly like params
+        in_specs = (state_spec, sp, sp, P())
+        out_specs = (state_spec, sp)
+    else:
+        in_specs = (state_spec, sp, P())
+        out_specs = state_spec
+    fn = jax.shard_map(run_k, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
     return jax.jit(fn)
 
 
@@ -139,7 +186,8 @@ class EnsembleExecutor:
 
     def __init__(self, config: CFDConfig, n_slots: int,
                  solver: NavierStokes3D | None = None, run_k=None,
-                 mesh=None, slot_axis: str = "data", telemetry=None):
+                 mesh=None, slot_axis: str = "data", telemetry=None,
+                 health_window: int = 0):
         from repro import obs
 
         self.tel = obs.resolve(telemetry)
@@ -150,10 +198,12 @@ class EnsembleExecutor:
         self.n_slots = n_slots
         self.mesh = mesh
         self.slot_axis = slot_axis
+        self.health_window = int(health_window)
         self.solver = solver if solver is not None else NavierStokes3D(
             solver_cfg, mesh if decomp else None)
         self._run_k = run_k if run_k is not None else make_ensemble_step(
-            self.solver, mesh=mesh, slot_axis=slot_axis, n_slots=n_slots)
+            self.solver, mesh=mesh, slot_axis=slot_axis, n_slots=n_slots,
+            health_window=self.health_window)
         fresh = self.solver.init_state()
         self._fresh = fresh            # per-slot initial state (unbatched)
         self.state = stack_trees([fresh] * n_slots)
@@ -168,6 +218,27 @@ class EnsembleExecutor:
                     if decomp else slot_spec(mesh, n_slots, axis=slot_axis))
             self.state = jax.device_put(self.state,
                                         NamedSharding(mesh, spec))
+        # device-side health ring: (slots, K, N_DIAG), shift-append (row
+        # K-1 is the newest frame).  Column 0 is the device-step stamp:
+        # -1 = blank sentinel on device; `read_health` overwrites it from
+        # `_ring_steps`, the host-side record of each write's chunk-end
+        # step — the device ships no step counter at all.  The ring
+        # shards over the slot axis exactly like params.
+        self.health_ring = None
+        self.steps_taken = 0
+        self._ring_steps: deque | None = None
+        if self.health_window:
+            K = self.health_window
+            # step column -1 = "no frame recorded yet" sentinel
+            blank = jnp.zeros((K, N_DIAG), jnp.float32).at[:, 0].set(-1.0)
+            ring = jnp.broadcast_to(blank, (n_slots, K, N_DIAG))
+            if mesh is not None:
+                from repro.dist.sharding import slot_spec
+
+                ring = jax.device_put(ring, NamedSharding(
+                    mesh, slot_spec(mesh, n_slots, axis=slot_axis)))
+            self.health_ring = ring
+            self._ring_steps = deque(maxlen=K)
         # per-slot scalars: host-authoritative (like the engine's slot
         # lengths), mirrored to a device struct only when admission dirties
         # them — steps between admissions ship nothing host->device
@@ -232,6 +303,10 @@ class EnsembleExecutor:
                 lambda full, one: lax.dynamic_update_index_in_dim(
                     full, one.astype(full.dtype), slot, 0),
                 self.state, dict(src))
+            # the health ring is deliberately NOT reset here: its step
+            # column is the executor's monotonic step counter, so the
+            # monitor filters a previous occupant's rows by admit-time
+            # device step — admission stays a single state update
             self.tel.fence(self.state)
         for k in PARAM_KEYS:
             self.params[k][slot] = np.float32(params[k])
@@ -256,10 +331,40 @@ class EnsembleExecutor:
                                 for k, v in self.params.items()}
         return self._params_dev
 
+    def step_args(self, k: int = 1) -> tuple:
+        """The exact argument tuple ``_run_k`` is dispatched with — the
+        perf layer lowers ``_run_k(*step_args(1))`` to cost-model the
+        farm step whatever the health signature."""
+        if self.health_ring is not None:
+            return (self.state, self._device_params(), self.health_ring,
+                    jnp.int32(k))
+        return (self.state, self._device_params(), jnp.int32(k))
+
     def step_many(self, k: int):
         """Advance the whole slot batch ``k`` device steps in one dispatch."""
-        self.state = self._run_k(self.state, self._device_params(),
-                                 jnp.int32(k))
+        out = self._run_k(*self.step_args(k))
+        if self.health_ring is not None:
+            self.state, self.health_ring = out
+            # the frame sampled this dispatch is the chunk-end step
+            self._ring_steps.append(self.steps_taken + int(k) - 1)
+        else:
+            self.state = out
+        self.steps_taken += int(k)
+
+    def read_health(self) -> np.ndarray:
+        """Host copy of the ``(slots, K, N_DIAG)`` health ring — THE one
+        device->host sync of the health path, issued by the farm only at
+        ``check_steady_every`` harvest boundaries.  Column 0 of the last
+        ``len(_ring_steps)`` rows is stamped with each frame's absolute
+        device step from the host-side write record; older rows keep the
+        -1 blank sentinel."""
+        # np.array (not asarray): the zero-copy view of a CPU jax array
+        # is read-only, and the step stamp writes into column 0
+        rings = np.array(self.health_ring)
+        if self._ring_steps:
+            rings[:, -len(self._ring_steps):, 0] = np.asarray(
+                self._ring_steps, np.float32)
+        return rings
 
     def step(self):
         """One device step for the whole slot batch."""

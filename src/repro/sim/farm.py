@@ -65,7 +65,8 @@ def static_key(config: CFDConfig, n_slots: int) -> tuple:
 
 
 def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
-                           slot_axis: str = "data", metrics=None):
+                           slot_axis: str = "data", metrics=None,
+                           health_window: int = 0):
     """(solver, jitted chunked ensemble step) for the static signature.
 
     ``mesh`` extends the signature (a Mesh is hashable): multi-device
@@ -75,11 +76,17 @@ def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
     slots × shards path); a mesh whose decomposed axes all have extent 1
     degrades to the plain slot-parallel executable.
 
+    ``health_window`` also extends the cache key — the in-situ health
+    ring changes the executable's signature — but NOT ``static_key``
+    itself: request admission matches on the physics signature alone, so
+    the same requests run on health-on and health-off farms unchanged.
+
     ``metrics`` (an :class:`repro.obs.Registry`) additionally receives
     the ``farm.compile_cache{result=hit|miss}`` counters, scoping cache
     stats to the caller's telemetry instead of only the process facade.
     """
-    key = static_key(config, n_slots) + (mesh, slot_axis if mesh else None)
+    key = static_key(config, n_slots) + (mesh, slot_axis if mesh else None,
+                                         health_window)
     hit = _STEP_CACHE.get(key)
     if hit is not None:
         _count_cache("hit", metrics)
@@ -89,7 +96,8 @@ def compiled_ensemble_step(config: CFDConfig, n_slots: int, mesh=None,
         config, mesh, slot_axis=slot_axis if mesh is not None else None)
     solver = NavierStokes3D(solver_cfg, mesh if decomp else None)
     _STEP_CACHE[key] = (solver, make_ensemble_step(
-        solver, mesh=mesh, slot_axis=slot_axis, n_slots=n_slots))
+        solver, mesh=mesh, slot_axis=slot_axis, n_slots=n_slots,
+        health_window=health_window))
     return _STEP_CACHE[key]
 
 
@@ -143,10 +151,10 @@ class SimResult:
     sid: int
     tag: str
     steps_done: int
-    terminated: str          # "steps" | "steady" | "residual" | "failed"
+    terminated: str    # "steps" | "steady" | "residual" | "failed" | "diverged"
     state: dict              # host arrays: vx, vy, vz, p (+ masks)
     config: CFDConfig
-    error: str | None = None   # set iff terminated == "failed"
+    error: str | None = None   # set iff terminated is "failed" / "diverged"
 
 
 class _SlotEntry:
@@ -171,25 +179,50 @@ class SimulationFarm:
     bitwise those of an uninstrumented farm, with no extra device syncs.
     ``farm_id`` tags this farm's trace events when several farms share
     one telemetry handle (the Runtime's one-service-per-signature case).
+
+    ``health`` (any :func:`repro.obs.health.resolve_health` spec) turns
+    on in-situ health monitoring: the compiled step accumulates per-sim
+    physics diagnostics into a device ring buffer, drained at the same
+    ``check_steady_every`` boundary the steady checks use (zero extra
+    steady-state host syncs), and a NaN/diverged sim is quarantined —
+    evicted with ``terminated="diverged"`` and flight-recorded — while
+    the remaining slots keep stepping bitwise-identically to a farm that
+    never admitted it.  Health is independent of ``telemetry``:
+    quarantine is functional behavior; events/metrics simply no-op when
+    telemetry is off.
     """
 
     def __init__(self, base_config: CFDConfig, n_slots: int = 8,
                  check_steady_every: int = 16, mesh=None,
                  slot_axis: str = "data", telemetry=None,
-                 farm_id: str | None = None):
+                 farm_id: str | None = None, health=None):
+        from repro.obs.health import (
+            FlightRecorder, HealthMonitor, resolve_health,
+        )
+
         self.base_config = base_config
         self.n_slots = n_slots
         self.check_steady_every = check_steady_every
         self.tel = obs.resolve(telemetry)
         self.farm_id = farm_id if farm_id is not None else base_config.case
+        self.health = resolve_health(health)
+        hw = self.health.window if self.health is not None else 0
         solver, run_k = compiled_ensemble_step(base_config, n_slots,
                                                mesh=mesh,
                                                slot_axis=slot_axis,
-                                               metrics=self.tel.metrics)
+                                               metrics=self.tel.metrics,
+                                               health_window=hw)
         self.exec = EnsembleExecutor(base_config, n_slots,
                                      solver=solver, run_k=run_k, mesh=mesh,
                                      slot_axis=slot_axis,
-                                     telemetry=self.tel)
+                                     telemetry=self.tel,
+                                     health_window=hw)
+        self.monitor = (HealthMonitor(self.health, telemetry=self.tel,
+                                      farm_id=self.farm_id)
+                        if self.health is not None else None)
+        self.flight = (FlightRecorder(self.health.flight_dir)
+                       if self.health is not None
+                       and self.health.flight_dir else None)
         self.table = SlotTable(n_slots)
         self.results: dict[int, SimResult] = {}
         self.device_steps = 0
@@ -253,6 +286,11 @@ class SimulationFarm:
                 self.table.replace(slot, entry)
                 self.tel.trace.emit("admit", sid=req.sid, farm=self.farm_id,
                                     slot=slot, step0=req.step0, tag=req.tag)
+                if self.monitor is not None:
+                    # rows stamped <= the current device step belong to
+                    # the slot's previous occupant
+                    self.monitor.admit(req.sid, slot, tag=req.tag,
+                                       last_step=self.device_steps - 1)
                 try:
                     self.exec.write_slot(slot,
                                          params_from_config(req.config),
@@ -284,8 +322,11 @@ class SimulationFarm:
         """
         chunk = min(e.req.steps - e.steps_done
                     for _, e in self.table.occupied())
-        if any(e.req.steady_tol is not None or e.req.residual_tol is not None
-               for _, e in self.table.occupied()):
+        if self.monitor is not None or any(
+                e.req.steady_tol is not None or e.req.residual_tol is not None
+                for _, e in self.table.occupied()):
+            # health drains share the steady-check cadence: cap the chunk
+            # at the boundary so the ring is read exactly there
             boundary = self.check_steady_every - (
                 self.device_steps % self.check_steady_every)
             chunk = min(chunk, boundary)
@@ -346,10 +387,71 @@ class SimulationFarm:
         self.device_steps += chunk
         for slot, entry in list(self.table.occupied()):
             entry.steps_done += chunk
+        # drain + quarantine BEFORE the steps-target harvest: a sim that
+        # goes bad in the chunk that would also have finished it reports
+        # "diverged", not a healthy-looking "steps" result
+        self._drain_health()
+        for slot, entry in list(self.table.occupied()):
             if entry.steps_done >= entry.req.steps:
                 self._finish(slot, entry, "steps")
         self._check_steady(resid)
         return chunk
+
+    def _drain_health(self):
+        """Read the device health ring (ONE host sync) at a harvest
+        boundary, run every resident sim's state machine, quarantine the
+        NaN/diverged ones."""
+        if (self.monitor is None
+                or self.device_steps % self.check_steady_every):
+            return
+        occupied = list(self.table.occupied())
+        if not occupied:
+            return
+        with self.tel.section("farm.health_drain"):
+            rings = self.exec.read_health()
+        self.tel.metrics.inc("health.drains")
+        from repro.obs.health import DIVERGED, NAN
+
+        for slot, entry in occupied:
+            rec = self.monitor.observe(entry.req.sid, rings[slot])
+            if rec.state in (DIVERGED, NAN) and self.health.quarantine:
+                self._quarantine(slot, entry, rec)
+        self.monitor.export_gauges()
+
+    def _quarantine(self, slot: int, entry: _SlotEntry, rec):
+        """Evict a NaN/diverged sim: flight-record its last-K health
+        frames + final (poisoned) state, resolve it with
+        ``terminated="diverged"``, free the slot.  The surviving slots
+        never see any of this — slots are independent under vmap, so
+        they keep stepping bitwise as if the bad sim was never admitted.
+        """
+        req = entry.req
+        with self.tel.section("farm.quarantine"):
+            state = self.exec.read_slot(slot)
+        flight_path = None
+        if self.flight is not None:
+            flight_path = self.flight.record(
+                req.sid, frames=rec.frames_array(), state=state,
+                meta={"tag": req.tag, "farm": self.farm_id, "slot": slot,
+                      "state": rec.state, "cause": rec.cause,
+                      "steps_done": entry.steps_done,
+                      "device_step": self.device_steps,
+                      "thresholds": dataclasses.asdict(self.health),
+                      "signature": str(static_key(req.config,
+                                                  self.n_slots))})
+        err = (f"health: {rec.state} ({rec.cause}) at device step "
+               f"{self.device_steps}"
+               + (f"; flight record: {flight_path}" if flight_path else ""))
+        self.results[req.sid] = SimResult(
+            sid=req.sid, tag=req.tag, steps_done=entry.steps_done,
+            terminated="diverged", state=state, config=req.config,
+            error=err)
+        self._live.discard(req.sid)
+        self.table.release(slot)
+        self.exec.clear_slot(slot)
+        self.monitor.release(req.sid)
+        self.tel.metrics.inc("health.quarantines")
+        self._resolved(req, entry.steps_done, "diverged", error=err)
 
     def _check_steady(self, resid=None):
         if self.device_steps % self.check_steady_every:
@@ -383,6 +485,8 @@ class SimulationFarm:
         self._live.discard(req.sid)
         self.table.release(slot)
         self.exec.clear_slot(slot)
+        if self.monitor is not None:
+            self.monitor.release(req.sid)
         self._resolved(req, entry.steps_done, reason)
 
     def _fail(self, slot: int, entry: _SlotEntry, exc: BaseException):
@@ -397,6 +501,8 @@ class SimulationFarm:
         self._live.discard(req.sid)
         self.table.release(slot)
         self.exec.clear_slot(slot)
+        if self.monitor is not None:
+            self.monitor.release(req.sid)
         self._resolved(req, entry.steps_done, "failed", error=err)
 
     def _resolved(self, req: SimRequest, steps_done: int, reason: str,
@@ -461,6 +567,8 @@ class SimulationFarm:
                 self._live.discard(sid)
                 self.table.release(slot)
                 self.exec.clear_slot(slot)
+                if self.monitor is not None:
+                    self.monitor.release(sid)
                 if self.tel.enabled:
                     self.tel.metrics.inc("sim.evictions")
                     self.tel.trace.emit("evict", sid=sid, farm=self.farm_id,
@@ -479,3 +587,23 @@ class SimulationFarm:
             if entry.req.sid == sid:
                 return entry.steps_done
         return None
+
+    def health_snapshot(self) -> dict:
+        """One dashboard frame: farm id, device step, queue depth, and a
+        fixed-order per-slot row (free slots included) with each resident
+        sim's latest health frame when monitoring is on.  Rendered by
+        ``repro.obs.health.render_dashboard`` / ``Runtime.watch``."""
+        slots = []
+        for slot, entry in enumerate(self.table.slots()):
+            if entry is None or not isinstance(entry, _SlotEntry):
+                slots.append({"slot": slot, "sid": None})
+                continue
+            row = {"slot": slot, "sid": entry.req.sid, "tag": entry.req.tag,
+                   "steps_done": entry.steps_done, "steps": entry.req.steps}
+            if self.monitor is not None:
+                row["health"] = self.monitor.frame_of(entry.req.sid)
+            slots.append(row)
+        return {"farm": self.farm_id, "device_steps": self.device_steps,
+                "queued": self.table.n_queued, "slots": slots,
+                "states": (self.monitor.counts()
+                           if self.monitor is not None else {})}

@@ -267,15 +267,17 @@ def _tg_builder(n: int = 32, **kw) -> CFDConfig:
 
 
 def _tg_error(solver, state, ctx):
+    import jax
+
     from repro.cfd import taylor_green
 
     t = float(ctx.get("t", 0.0))
     ax, ay = taylor_green.analytic(solver, t)
-    return {
-        "t": t,
-        "err_vx": float(jnp.abs(state["vx"] - ax).max()),
-        "err_vy": float(jnp.abs(state["vy"] - ay).max()),
-    }
+    # both reductions in one fetch — per-value float() syncs twice and
+    # blocks the ANALYSIS bin's dispatch
+    ex, ey = jax.device_get((jnp.abs(state["vx"] - ax).max(),
+                             jnp.abs(state["vy"] - ay).max()))
+    return {"t": t, "err_vx": float(ex), "err_vy": float(ey)}
 
 
 register_scenario(Scenario(

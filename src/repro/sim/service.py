@@ -45,12 +45,13 @@ class SimulationService:
     def __init__(self, base_config: CFDConfig, n_slots: int = 8,
                  ckpt_dir: str | None = None, check_steady_every: int = 16,
                  mesh=None, slot_axis: str = "data", telemetry=None,
-                 farm_id: str | None = None):
+                 farm_id: str | None = None, health=None):
         self.tel = obs.resolve(telemetry)
         self.farm = SimulationFarm(base_config, n_slots,
                                    check_steady_every=check_steady_every,
                                    mesh=mesh, slot_axis=slot_axis,
-                                   telemetry=self.tel, farm_id=farm_id)
+                                   telemetry=self.tel, farm_id=farm_id,
+                                   health=health)
         self._evicted: dict[int, _Evicted] = {}
         self._requeued_progress: dict[int, int] = {}  # readmitted, waiting
         self._ckpt = Checkpointer(ckpt_dir, keep_last=0) if ckpt_dir else None
@@ -85,6 +86,7 @@ class SimulationService:
             self.tel.metrics.inc("service.watchdog_stalls")
             self.tel.trace.emit("watchdog_stall", gap_s=now - last,
                                 deadline_s=deadline)
+            self._mark_unhealthy("watchdog_stall", gap_s=now - last)
         if chunk_wall_s is not None and self.watchdog is not None:
             for ev in self.watchdog.observe(self.farm.device_steps,
                                             chunk_wall_s):
@@ -92,6 +94,23 @@ class SimulationService:
                 self.tel.trace.emit("watchdog_" + ev.kind, step=ev.step,
                                     step_time_s=ev.step_time,
                                     threshold_s=ev.threshold)
+                if ev.kind in ("slow_step", "hang"):
+                    self._mark_unhealthy("watchdog_" + ev.kind,
+                                         step_time_s=ev.step_time)
+
+    def _mark_unhealthy(self, cause: str, **detail):
+        """Watchdog -> health vocabulary: a stall/slow/hang observation
+        marks every resident sim ``warning`` in the health state machine,
+        emitting the same ``kind="health"`` trace-event schema as
+        quarantine — one timeline explains both hangs and divergences.
+        Healthy frames at a later drain clear the warning."""
+        monitor = self.farm.monitor
+        if monitor is None:
+            return
+        from repro.obs.health import WARNING
+
+        for _, entry in self.farm.table.occupied():
+            monitor.mark(entry.req.sid, WARNING, cause=cause, **detail)
 
     # -- intake ---------------------------------------------------------------
     def submit(self, req: SimRequest) -> int:
@@ -99,17 +118,25 @@ class SimulationService:
 
     # -- status ---------------------------------------------------------------
     def poll(self, sid: int) -> dict:
-        """{"status": queued|running|evicted|done|failed, "steps_done": int}.
+        """{"status": queued|running|evicted|done|failed|diverged,
+        "steps_done": int}.
 
         A failed simulation (admission or compiled step raised) reports
-        ``status="failed"`` with the captured ``error`` string."""
+        ``status="failed"`` with the captured ``error`` string; a
+        health-quarantined one reports ``status="diverged"`` (its
+        post-mortem result — final state, flight-record path in
+        ``error`` — still returns through ``result``).  On a
+        health-monitored farm a *running* sim additionally carries its
+        latest drained health frame under ``"health"`` (state, cause,
+        step, div_linf, ke, umax, cfl, finite) — the streamed
+        intermediate analysis."""
         if self.tel.enabled:
             self._beat()
         if sid in self.farm.results:
             res = self.farm.results[sid]
-            if res.terminated == "failed":
-                return {"status": "failed", "steps_done": res.steps_done,
-                        "error": res.error}
+            if res.terminated in ("failed", "diverged"):
+                return {"status": res.terminated,
+                        "steps_done": res.steps_done, "error": res.error}
             return {"status": "done", "steps_done": res.steps_done}
         if sid in self._evicted:
             return {"status": "evicted",
@@ -117,7 +144,12 @@ class SimulationService:
         running = self.farm.steps_done(sid)
         if running is not None:
             self._requeued_progress.pop(sid, None)
-            return {"status": "running", "steps_done": running}
+            out = {"status": "running", "steps_done": running}
+            if self.farm.monitor is not None:
+                frame = self.farm.monitor.frame_of(sid)
+                if frame is not None:
+                    out["health"] = frame
+            return out
         if self.farm.known(sid):
             # a readmitted sim waiting for a slot keeps its saved progress
             return {"status": "queued",

@@ -416,6 +416,355 @@ class TestBenchSchema:
 
 
 # ---------------------------------------------------------------------------
+# health: unit layer (state machine, flight records, dashboard)
+# ---------------------------------------------------------------------------
+def _frame(step=0, div=0.0, ke=0.1, umax=1.0, cfl=0.1, finite=1.0):
+    return {"step": step, "div_linf": div, "ke": ke, "umax": umax,
+            "cfl": cfl, "finite": finite}
+
+
+def _row(step, div=0.0, ke=0.1, umax=1.0, cfl=0.1, finite=1.0):
+    return [float(step), div, ke, umax, cfl, finite]
+
+
+class TestHealthUnit:
+    def test_diag_columns_pin_the_solver_contract(self):
+        """obs.health and ns3d each own a copy of the diagnostics name
+        tuple (the solver owes nothing to obs); this is the pin that
+        keeps them from drifting apart."""
+        from repro.cfd import ns3d
+        from repro.obs import health
+
+        assert health.DIAG_COLUMNS == ("step",) + ns3d.HEALTH_DIAGS
+        assert health.N_DIAG == len(health.DIAG_COLUMNS)
+
+    def test_classify_frame_thresholds(self):
+        from repro.obs import health
+
+        cfg = health.HealthConfig()
+        assert health.classify_frame(_frame(), cfg) == (health.HEALTHY, "")
+        assert health.classify_frame(_frame(cfl=2.5), cfg) == \
+            (health.WARNING, "cfl")
+        assert health.classify_frame(_frame(div=1e4), cfg) == \
+            (health.WARNING, "divergence")
+        assert health.classify_frame(_frame(div=1e8), cfg) == \
+            (health.DIVERGED, "divergence")
+        assert health.classify_frame(_frame(cfl=1e4), cfg) == \
+            (health.DIVERGED, "cfl")
+        assert health.classify_frame(_frame(finite=0.0), cfg) == \
+            (health.NAN, "nonfinite")
+        # a NaN that leaks into the diagnostics themselves is nonfinite
+        assert health.classify_frame(_frame(div=float("nan")), cfg) == \
+            (health.NAN, "nonfinite")
+
+    def test_monitor_warning_recovers_but_terminal_sticks(self):
+        from repro.obs import health
+
+        mon = health.HealthMonitor(health.HealthConfig())
+        mon.admit(7, slot=0, tag="t")
+        assert mon.observe(7, np.array([_row(0, cfl=3.0)])).state \
+            == health.WARNING
+        assert mon.observe(7, np.array([_row(1)])).state == health.HEALTHY
+        assert mon.observe(7, np.array([_row(2, finite=0.0)])).state \
+            == health.NAN
+        # terminal: later healthy frames cannot resurrect the record
+        assert mon.observe(7, np.array([_row(3)])).state == health.NAN
+
+    def test_monitor_skips_sentinels_and_stale_steps(self):
+        from repro.obs import health
+
+        mon = health.HealthMonitor(health.HealthConfig(window=4))
+        mon.admit(1, slot=0)
+        rec = mon.observe(1, np.array([_row(-1), _row(2), _row(0), _row(1)]))
+        assert [f["step"] for f in rec.frames] == [0, 1, 2]
+        # a re-drain of the same ring adds nothing
+        rec = mon.observe(1, np.array([_row(2), _row(0), _row(1)]))
+        assert [f["step"] for f in rec.frames] == [0, 1, 2]
+
+    def test_monitor_emits_trace_and_metrics_on_transition(self):
+        from repro.obs import health
+
+        tel = obs.telemetry()
+        mon = health.HealthMonitor(health.HealthConfig(), telemetry=tel,
+                                   farm_id="f0")
+        mon.admit(3, slot=1, tag="x")
+        mon.observe(3, np.array([_row(0, div=1e8)]))
+        evs = [e for e in tel.trace.events if e["kind"] == "health"]
+        assert len(evs) == 1
+        ev = evs[0]
+        assert ev["sid"] == 3 and ev["farm"] == "f0" and ev["slot"] == 1
+        assert ev["state"] == "diverged" and ev["from"] == "healthy"
+        assert ev["cause"] == "divergence" and ev["frame"]["step"] == 0
+        assert tel.metrics.get("health.events", state="diverged",
+                               cause="divergence") == 1
+
+    def test_mark_shares_the_event_schema(self):
+        from repro.obs import health
+
+        tel = obs.telemetry()
+        mon = health.HealthMonitor(health.HealthConfig(), telemetry=tel)
+        mon.admit(5, slot=0)
+        mon.mark(5, health.WARNING, cause="watchdog_stall", gap_s=1.5)
+        ev = [e for e in tel.trace.events if e["kind"] == "health"][0]
+        assert ev["state"] == "warning" and ev["cause"] == "watchdog_stall"
+        assert ev["gap_s"] == 1.5
+        assert mon.state_of(5) == health.WARNING
+
+    def test_registry_remove_drops_the_series(self):
+        reg = obs.Registry()
+        reg.set("health.sim_state", 2.0, sid=9)
+        reg.inc("health.frames")
+        assert reg.remove("health.sim_state", sid=9) is True
+        assert reg.get("health.sim_state", sid=9) is None
+        assert reg.remove("health.sim_state", sid=9) is False
+        assert reg.get("health.frames") == 1   # other series untouched
+
+    def test_flight_record_round_trip(self, tmp_path):
+        from repro.obs import health
+
+        fr = health.FlightRecorder(str(tmp_path))
+        frames = np.arange(18, dtype=np.float32).reshape(3, 6)
+        state = {"vx": np.ones((2, 3, 4), np.float32),
+                 "p": np.zeros((2, 3, 4), np.float32)}
+        path = fr.record(11, frames=frames, state=state,
+                         meta={"cause": "cfl", "tag": "poison"})
+        assert path.endswith("step_00000011")
+        rec = health.load_flight_record(str(tmp_path), 11)
+        np.testing.assert_array_equal(rec["frames"], frames)
+        assert set(rec["state"]) == {"vx", "p"}
+        np.testing.assert_array_equal(rec["state"]["vx"], state["vx"])
+        assert rec["meta"]["cause"] == "cfl"
+        assert rec["meta"]["columns"] == list(health.DIAG_COLUMNS)
+
+    def test_resolve_health_specs(self):
+        from repro.obs import health
+
+        assert health.resolve_health(None) is None
+        assert health.resolve_health(False) is None
+        assert health.resolve_health(True) == health.HealthConfig()
+        cfg = health.HealthConfig(window=4)
+        assert health.resolve_health(cfg) is cfg
+        assert health.resolve_health({"cfl_warn": 5.0}).cfl_warn == 5.0
+        with pytest.raises(TypeError):
+            health.resolve_health(42)
+
+
+# ---------------------------------------------------------------------------
+# health: NaN-injection battery (quarantine, flight record, bitwise twins)
+# ---------------------------------------------------------------------------
+HEALTH_JOBS = ((80.0, "h0"), (150.0, "h1"), (240.0, "h2"))
+
+
+def _health_runtime(ckpt_dir, telemetry=True):
+    return api.runtime(n=N, n_slots=4, check_every=8, ckpt_dir=ckpt_dir,
+                       health=True, telemetry=telemetry, **KW)
+
+
+def _submit_healthy(rt):
+    return [rt.submit("cavity", re=re, steps=24, tag=tag)
+            for re, tag in HEALTH_JOBS]
+
+
+class TestHealthQuarantine:
+    @pytest.fixture(scope="class")
+    def quarantine_run(self, tmp_path_factory):
+        """A drained health-monitored farm: 3 healthy cavity sims plus
+        one poisoned with a huge dt (slot-parameterized, so no separate
+        compile) that blows past the CFL-diverged threshold."""
+        tmp = str(tmp_path_factory.mktemp("health"))
+        rt = _health_runtime(tmp)
+        healthy = _submit_healthy(rt)
+        bad = rt.submit("cavity", re=100.0, steps=24, dt=50.0, tag="poison")
+        res = rt.drain()
+        return rt, healthy, bad, res, tmp
+
+    def test_poisoned_slot_quarantines(self, quarantine_run):
+        rt, healthy, bad, res, _ = quarantine_run
+        r = res[bad]
+        assert r.terminated == "diverged"
+        assert r.steps_done < 24
+        assert "health: " in r.error and "flight record" in r.error
+        assert rt.poll(bad)["status"] == "diverged"
+        for sid in healthy:
+            assert res[sid].terminated == "steps"
+            assert res[sid].steps_done == 24
+
+    def test_flight_record_is_readable_post_mortem(self, quarantine_run):
+        from repro.obs import health
+
+        rt, _, bad, res, tmp = quarantine_run
+        inner = rt._routes[bad][1]
+        rec = health.load_flight_record(f"{tmp}/flight", inner)
+        frames = rec["frames"]
+        assert frames.shape[1] == health.N_DIAG
+        assert 1 <= frames.shape[0] <= health.HealthConfig().window
+        # the recorded tail must contain the killing frame
+        cfl = frames[:, health.DIAG_COLUMNS.index("cfl")]
+        finite = frames[:, health.DIAG_COLUMNS.index("finite")]
+        assert (cfl[np.isfinite(cfl)] >= 1e3).any() or (finite < 0.5).any()
+        assert {"vx", "vy", "vz", "p"} <= set(rec["state"])
+        meta = rec["meta"]
+        assert meta["state"] in ("diverged", "nan") and meta["cause"]
+        assert meta["tag"] == "poison" and "thresholds" in meta
+
+    def test_healthy_slots_bitwise_vs_never_admitted(self, quarantine_run,
+                                                     tmp_path):
+        """The quarantine isolation contract: slots that shared a farm
+        with the poisoned sim finish bitwise-identical to a farm that
+        never admitted it (same slot assignment: healthy submitted
+        first)."""
+        _, healthy, _, res, _ = quarantine_run
+        rt2 = _health_runtime(str(tmp_path))
+        twins = _submit_healthy(rt2)
+        res2 = rt2.drain()
+        for a, b in zip(healthy, twins):
+            for f in ("vx", "vy", "vz", "p"):
+                np.testing.assert_array_equal(res[a].state[f],
+                                              res2[b].state[f])
+
+    def test_zero_extra_host_syncs_on_harvest_cadence(self, quarantine_run):
+        """The perf pin: ring drains ride the existing
+        check_steady_every boundary — drains == boundaries crossed, and
+        the farm cost row books exactly that."""
+        from repro.obs import perf
+
+        rt, _, _, _, _ = quarantine_run
+        svc = next(iter(rt._services.values()))
+        boundaries = svc.farm.device_steps // svc.farm.check_steady_every
+        assert svc.farm.device_steps % svc.farm.check_steady_every == 0
+        assert rt.telemetry.metrics.get("health.drains") == boundaries
+        timers = rt.telemetry.timers.snapshot()
+        drain_s, drain_n = perf._find_sections(timers, "farm.health_drain")
+        assert drain_n == boundaries
+        row = perf.farm_cost_row(svc)
+        assert row.health_drains == boundaries
+        assert row.health_boundaries == boundaries
+        rendered = perf.PerfReport([row]).render()
+        assert "extra host syncs: 0" in rendered
+
+    def test_health_events_join_the_trace(self, quarantine_run):
+        rt, _, bad, _, _ = quarantine_run
+        inner = rt._routes[bad][1]
+        evs = rt.telemetry.trace.events_for(inner)
+        kinds = [e["kind"] for e in evs]
+        assert "health" in kinds and "result" in kinds
+        health_ev = next(e for e in evs if e["kind"] == "health")
+        assert health_ev["state"] in ("diverged", "nan")
+        result_ev = next(e for e in evs if e["kind"] == "result")
+        assert result_ev["terminated"] == "diverged"
+        assert rt.telemetry.metrics.get("health.quarantines") == 1
+        assert rt.telemetry.metrics.get(
+            "sim.results", terminated="diverged") == 1
+
+    def test_chrome_export_puts_health_on_its_own_track(self, quarantine_run):
+        rt, _, _, _, _ = quarantine_run
+        doc = obs.validate_chrome_trace(rt.telemetry.trace.to_chrome())
+        evs = doc["traceEvents"]
+        health_evs = [e for e in evs if e["ph"] == "i"
+                      and e["name"] == "health"]
+        assert health_evs and all(e["pid"] == 3 for e in health_evs)
+        assert any(e.get("args", {}).get("name") == "health"
+                   for e in evs if e["ph"] == "M")
+        # the quarantined sim still closes a residency span on the slot
+        # track — 4 admissions, 4 spans
+        assert len([e for e in evs if e["ph"] == "X"]) == 4
+
+    def test_prometheus_exposes_health_series(self, quarantine_run):
+        rt, _, _, _, _ = quarantine_run
+        svc = next(iter(rt._services.values()))
+        text = svc.prometheus_text()
+        assert "repro_health_quarantines 1" in text
+        assert "repro_health_drains" in text
+        assert 'repro_health_sims{state="healthy"}' in text
+        assert 'repro_health_events{' in text
+
+    def test_watch_renders_the_dashboard(self, quarantine_run):
+        rt, _, _, _, _ = quarantine_run
+        text = rt.watch()
+        assert "== repro health ==" in text
+        assert "slot" in text and "free" in text   # drained farm
+
+    def test_quarantine_works_with_telemetry_off(self, quarantine_run,
+                                                 tmp_path):
+        """Health is functional, not telemetry: with telemetry off the
+        quarantine still fires, the flight record still lands, and the
+        healthy trajectories are bitwise the telemetry-on ones."""
+        from repro.obs import health
+
+        _, healthy, _, res_on, _ = quarantine_run
+        rt = _health_runtime(str(tmp_path), telemetry=False)
+        assert rt.telemetry is obs.NULL
+        twins = _submit_healthy(rt)
+        bad = rt.submit("cavity", re=100.0, steps=24, dt=50.0, tag="poison")
+        res = rt.drain()
+        assert res[bad].terminated == "diverged"
+        rec = health.load_flight_record(f"{tmp_path}/flight",
+                                        rt._routes[bad][1])
+        assert rec["meta"]["tag"] == "poison"
+        for a, b in zip(healthy, twins):
+            for f in ("vx", "vy", "vz", "p"):
+                np.testing.assert_array_equal(res_on[a].state[f],
+                                              res[b].state[f])
+
+    def test_poll_streams_the_latest_frame_while_running(self):
+        svc = SimulationService(cavity.config(N, **KW), n_slots=1,
+                                check_steady_every=4, telemetry=True,
+                                health=True)
+        sid = svc.submit(cavity.sim_request(N, re=100.0, steps=12, **KW))
+        svc.run(4)
+        out = svc.poll(sid)
+        assert out["status"] == "running" and out["steps_done"] == 4
+        h = out["health"]
+        assert h["state"] == "healthy" and h["step"] == 3
+        assert all(np.isfinite(h[c]) for c in ("div_linf", "ke", "cfl"))
+        from repro.obs.health import render_dashboard
+
+        text = render_dashboard([svc.farm.health_snapshot()])
+        assert "ok" in text and "cavity" in text
+        svc.drain()
+
+    def test_watchdog_stall_marks_resident_sims_warning(self):
+        """Satellite: a watchdog stall speaks the health vocabulary —
+        resident sims go ``warning`` with the same kind="health" trace
+        schema as quarantine (and recover on the next healthy drain)."""
+        tel = obs.telemetry(heartbeat_deadline_s=0.0)
+        svc = SimulationService(cavity.config(N, **KW), n_slots=2,
+                                check_steady_every=2, telemetry=tel,
+                                health=True)
+        sid = svc.submit(cavity.sim_request(N, re=100.0, steps=6, **KW))
+        svc.result(sid)
+        evs = [e for e in tel.trace.events if e["kind"] == "health"
+               and e["cause"] == "watchdog_stall"]
+        assert evs and evs[0]["state"] == "warning" and "gap_s" in evs[0]
+        # the sim recovered and finished: warning -> healthy also traced
+        recoveries = [e for e in tel.trace.events if e["kind"] == "health"
+                      and e["state"] == "healthy" and e["from"] == "warning"]
+        assert recoveries
+
+    def test_health_off_runs_the_pre_health_executable(self):
+        """health=False compiles the exact PR-8 step signature: no ring,
+        no step counter, no monitor — and drain results match a
+        health-on farm bitwise (diagnostics are read-only)."""
+        def run(health):
+            rt = api.runtime(n=N, n_slots=2, health=health, **KW)
+            sids = [rt.submit("cavity", re=re, steps=10)
+                    for re, _ in HEALTH_JOBS[:2]]
+            out = rt.drain()
+            svc = next(iter(rt._services.values()))
+            return [out[s] for s in sids], svc.farm.exec
+
+        off, ex_off = run(False)
+        on, ex_on = run(True)
+        assert ex_off.health_ring is None and ex_off.health_window == 0
+        assert ex_on.health_ring is not None
+        assert len(ex_off.step_args(1)) == 3
+        assert len(ex_on.step_args(1)) == 4
+        for a, b in zip(off, on):
+            for f in ("vx", "vy", "vz", "p"):
+                np.testing.assert_array_equal(a.state[f], b.state[f])
+
+
+# ---------------------------------------------------------------------------
 # telemetry resolution
 # ---------------------------------------------------------------------------
 class TestResolve:

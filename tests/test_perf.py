@@ -342,3 +342,79 @@ class TestRegressionGate:
         doc = obs.load_bench(path)
         perf.validate_perf(doc["metrics"]["perf"])
         assert doc["passed"] is True
+
+
+# ---------------------------------------------------------------------------
+# health-overhead gate: the modeled monitor cost, not a wall-clock ratio
+# ---------------------------------------------------------------------------
+def _health_doc(model=..., *, drains=2, boundaries=2, health_tp=100.0):
+    if model is ...:
+        model = {"status": "ok", "check_every": 8,
+                 "hbm_bytes_step": 8e5, "hbm_bytes_step_health": 8.6e5,
+                 "hbm_bytes_diag_per_chunk": 6e4,
+                 "modeled_overhead": 0.0094}
+    doc = _bench_doc()
+    health = {"drains": drains, "boundaries": boundaries}
+    if model is not None:
+        health["model"] = model
+    doc["metrics"]["health"] = health
+    doc["metrics"]["steady_sim_steps_per_s_checked"] = 100.0
+    doc["metrics"]["steady_sim_steps_per_s_health"] = health_tp
+    return doc
+
+
+class TestHealthOverheadGate:
+    def test_modeled_overhead_within_bound_passes(self):
+        # wall-clock pair 30% apart: recorded but NOT gated — only the
+        # deterministic model binds
+        v = compare(_health_doc(health_tp=70.0), None)
+        assert v["passed"], v["failures"]
+
+    def test_modeled_overhead_over_bound_fails(self):
+        doc = _health_doc(dict(_health_doc()["metrics"]["health"]["model"],
+                               modeled_overhead=0.08))
+        v = compare(doc, None)
+        assert not v["passed"]
+        assert any("modeled health overhead" in f for f in v["failures"])
+
+    def test_unparsed_model_fails(self):
+        doc = _health_doc({"status": "unparsed", "error": "boom",
+                           "modeled_overhead": None})
+        v = compare(doc, None)
+        assert not v["passed"]
+        assert any("cost model unparsed" in f for f in v["failures"])
+
+    def test_dropped_model_with_health_throughput_fails(self):
+        """An artifact that records health throughput but no model means
+        the gate was silently disconnected — fail, don't bootstrap."""
+        v = compare(_health_doc(None), None)
+        assert not v["passed"]
+        assert any("no health.model" in f for f in v["failures"])
+
+    def test_off_cadence_drain_fails(self):
+        v = compare(_health_doc(drains=3, boundaries=2), None)
+        assert not v["passed"]
+        assert any("harvest boundaries" in f for f in v["failures"])
+
+    def test_docs_without_health_block_bootstrap(self):
+        assert compare(_bench_doc(), None)["passed"]
+
+    def test_model_on_real_executables_is_deterministic_and_small(self):
+        """The number the gate binds on, computed twice from the real
+        lowered farm executables: bit-identical across calls (the whole
+        point — wall-clock is not) and within the 3% bound."""
+        def executor(health):
+            rt = api.runtime(n=N, n_slots=2, health=health,
+                             check_every=8, **KW)
+            rt.submit("cavity", re=100.0, steps=4)
+            rt.drain()
+            return next(iter(rt._services.values())).farm.exec
+
+        ex_off, ex_on = executor(False), executor(True)
+        a = perf.health_overhead_model(ex_off, ex_on, 8)
+        b = perf.health_overhead_model(ex_off, ex_on, 8)
+        assert a == b
+        assert a["status"] == "ok"
+        assert 0.0 < a["modeled_overhead"] <= 0.03
+        assert a["hbm_bytes_diag_per_chunk"] > 0
+        assert compare(_health_doc(a), None)["passed"]

@@ -121,12 +121,16 @@ def structural_failures(fresh: dict) -> list[str]:
     drains exactly on the harvest cadence.  ``health_smoke``: the
     NaN-injection quarantine
     actually quarantined, kept the healthy slots, and left a readable
-    flight record.
+    flight record.  ``durability_smoke``: a SIGKILLed farm really
+    resumed from the job store — incomplete jobs first, exactly once,
+    bitwise identical to an uninterrupted run.
     """
     if fresh.get("bench") == "smoke":
         return _smoke_health_failures(fresh)
     if fresh.get("bench") == "health_smoke":
         return _health_smoke_failures(fresh)
+    if fresh.get("bench") == "durability_smoke":
+        return _durability_smoke_failures(fresh)
     if fresh.get("bench") != "ensemble_pallas":
         return []
     m = fresh.get("metrics", {})
@@ -215,6 +219,43 @@ def _health_smoke_failures(fresh: dict) -> list[str]:
         fails.append(
             f"health_smoke: {m.get('drains')} drains over "
             f"{m.get('boundaries')} boundaries — extra host syncs")
+    return fails
+
+
+def _durability_smoke_failures(fresh: dict) -> list[str]:
+    """Kill-and-resume invariants, all host-independent.
+
+    The child process must really have died by SIGKILL mid-run leaving
+    orphaned rows behind; the restarted Runtime must resume every
+    incomplete job *before* claiming fresh queued work, execute each
+    job exactly once (one ``result`` audit event per row), drain the
+    queue to empty, and produce results bitwise identical to an
+    uninterrupted run."""
+    m = fresh.get("metrics", {})
+    fails = []
+    if m.get("killed") is not True:
+        fails.append("durability_smoke: child was not SIGKILLed mid-run — "
+                     "the smoke never exercised a crash")
+    if m.get("orphaned_ok") is not True:
+        fails.append("durability_smoke: expected orphaned store state "
+                     "(incomplete rows + evict snapshot) not found after "
+                     "the kill")
+    if not m.get("resumed", 0) >= 1:
+        fails.append("durability_smoke: restarted Runtime resumed no "
+                     "incomplete jobs")
+    if m.get("resumed_first") is not True:
+        fails.append("durability_smoke: a queued job was claimed before "
+                     "the orphaned incomplete jobs — resume-first order "
+                     "violated")
+    if m.get("single_execution") is not True:
+        fails.append("durability_smoke: a job recorded more than one "
+                     "terminal 'result' event — double execution")
+    if m.get("all_done") is not True:
+        fails.append("durability_smoke: queue did not drain to all-done "
+                     f"(store_counts={m.get('store_counts')})")
+    if m.get("parity_ok") is not True:
+        fails.append("durability_smoke: resumed results are not bitwise "
+                     "identical to an uninterrupted run")
     return fails
 
 

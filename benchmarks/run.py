@@ -220,6 +220,131 @@ def run_health_smoke(out_dir: str) -> dict:
     return doc
 
 
+_DURABILITY_CHILD = """\
+import os, signal
+from repro import api
+
+rt = api.runtime(n={n}, n_slots=2, jacobi_iters=8,
+                 store={{"path": {store!r}, "ttl_s": 1.0}})
+sids = [rt.submit("cavity", re=re, steps={steps}, tag=tag)
+        for re, tag in ((80.0, "a"), (160.0, "b"), (240.0, "c"))]
+rt.enqueue("cavity", re=320.0, steps={steps}, tag="d")
+svc = rt.services()[0]
+svc.run(4)                     # a, b mid-flight; c queued; d detached
+assert rt.evict(sids[0])       # a spills a durable resume pointer
+svc.run(2)                     # b keeps going; c admitted into a's slot
+print("READY", flush=True)
+os.kill(os.getpid(), signal.SIGKILL)
+"""
+
+
+def run_durability_smoke(out_dir: str) -> dict:
+    """Kill-and-resume smoke for the durable job engine (repro.jobs).
+
+    A child process submits four simulations against a shared SQLite
+    ``JobStore`` (one evicted with a durable snapshot, two mid-run, one
+    detached enqueue) and SIGKILLs itself mid-chunk.  After the dead
+    process's leases expire, a fresh Runtime on the same store must (a)
+    resume every incomplete job BEFORE claiming queued work, (b) finish
+    all four, (c) execute each job exactly once (one terminal ``result``
+    audit event per job), and (d) produce final states bitwise-identical
+    to an uninterrupted run of the same requests.  The store file and its
+    snapshot directories are left in ``out_dir`` as CI artifacts.
+    """
+    import shutil
+    import signal as _signal
+    import subprocess
+
+    import numpy as np
+
+    from repro import api, obs, jobs
+    from repro.jobs import JobStore
+
+    n, steps = 12, 12
+    store_dir = os.path.join(out_dir, "durability-store")
+    shutil.rmtree(store_dir, ignore_errors=True)
+    store_path = os.path.join(store_dir, "jobs.sqlite")
+    t0 = time.perf_counter()
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    child = subprocess.run(
+        [sys.executable, "-c",
+         _DURABILITY_CHILD.format(n=n, steps=steps, store=store_path)],
+        env=env, capture_output=True, text=True, timeout=600)
+    killed = ("READY" in child.stdout
+              and child.returncode == -_signal.SIGKILL)
+    if not killed:
+        print(f"[benchmarks] durability child failed:\n{child.stderr}")
+
+    probe = JobStore(store_path)
+    tags = {j.tag: j.job_id for j in probe.jobs()}
+    incomplete = {j.job_id for j in probe.jobs()
+                  if j.status in jobs.INCOMPLETE}
+    seq0 = probe.last_seq()
+    orphaned_ok = (len(tags) == 4 and len(incomplete) >= 2
+                   and probe.latest_snapshot(tags.get("a", -1)) is not None)
+    time.sleep(1.2)                      # let the dead leases expire
+
+    rt = api.runtime(n=n, n_slots=2, jacobi_iters=8, telemetry=True,
+                     store={"path": store_path, "ttl_s": 30.0})
+    resumed = len(rt._jobs_local & incomplete)
+    rt.drain()
+    st = rt.store
+    all_done = st.counts()[jobs.DONE] == 4 and st.queue_depth() == 0
+    # resume-first, from the audit log: every claim of an incomplete job
+    # precedes every claim of a queued one
+    claims = {e["job_id"]: e["seq"] for e in st.events(after_seq=seq0)
+              if e["event"] in ("claim", "takeover")
+              and e["owner"] == st.owner}
+    queued_seqs = [s for j, s in claims.items() if j not in incomplete]
+    resumed_first = bool(incomplete) and bool(queued_seqs) and \
+        max(claims[j] for j in incomplete) < min(queued_seqs)
+    single_execution = all(
+        len(st.events(jid, event="result")) == 1 for jid in tags.values())
+
+    # bitwise parity against a never-interrupted run of the same requests
+    ref = api.runtime(n=n, n_slots=2, jacobi_iters=8)
+    ref_sids = {tag: ref.submit("cavity", re=re, steps=steps, tag=tag)
+                for re, tag in ((80.0, "a"), (160.0, "b"),
+                                (240.0, "c"), (320.0, "d"))}
+    ref_res = ref.drain()
+    parity_ok = bool(tags) and all(
+        np.array_equal(st.load_result(jid)[f],
+                       np.asarray(ref_res[ref_sids[tag]].state[f]))
+        for tag, jid in tags.items()
+        for f in ("vx", "vy", "vz", "p")) if all_done else False
+
+    wall = time.perf_counter() - t0
+    doc = obs.make_bench_doc(
+        "durability_smoke",
+        {
+            "grid": f"{n}x{n}x4",
+            "jobs": len(tags),
+            "killed": bool(killed),
+            "orphaned_ok": bool(orphaned_ok),
+            "incomplete_at_restart": len(incomplete),
+            "resumed": resumed,
+            "resumed_first": bool(resumed_first),
+            "lease_takeovers": st.takeovers,
+            "single_execution": bool(single_execution),
+            "all_done": bool(all_done),
+            "parity_ok": bool(parity_ok),
+            "store_counts": st.counts(),
+        },
+        passed=bool(killed and orphaned_ok and all_done and resumed >= 1
+                    and resumed_first and single_execution and parity_ok),
+        wall_s=round(wall, 3),
+    )
+    path = obs.write_bench(doc, out_dir)
+    obs.load_bench(path)
+    print(f"[benchmarks] durability_smoke -> {path} "
+          f"(passed={doc['passed']}, {doc['wall_s']}s)")
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -230,16 +355,21 @@ def main():
                     help="NaN-injection quarantine smoke -> "
                          "BENCH_health_smoke.json + health_events.jsonl + "
                          "flight-records/")
+    ap.add_argument("--durability-smoke", action="store_true",
+                    help="SIGKILL-and-resume durable-jobs smoke -> "
+                         "BENCH_durability_smoke.json + durability-store/")
     ap.add_argument("--out-dir", default=".",
                     help="where BENCH_*.json artifacts land")
     args = ap.parse_args()
 
-    if args.smoke or args.health_smoke:
+    if args.smoke or args.health_smoke or args.durability_smoke:
         ok = True
         if args.smoke:
             ok &= run_smoke(args.out_dir)["passed"]
         if args.health_smoke:
             ok &= run_health_smoke(args.out_dir)["passed"]
+        if args.durability_smoke:
+            ok &= run_durability_smoke(args.out_dir)["passed"]
         sys.exit(0 if ok else 1)
 
     from repro import obs

@@ -120,6 +120,14 @@ class RuntimeConfig:
     # under <ckpt_dir>/flight when a checkpoint dir is set.  Independent
     # of `telemetry` — quarantine is functional, not instrumentation.
     health: Any = False
+    # durable job engine (repro.jobs): None (default, the in-memory path,
+    # bitwise-invisible), a repro.jobs.JobStore, True (jobs.sqlite under
+    # ckpt_dir), a sqlite path string, or a JobStore kwargs dict
+    # ({"path": ..., "ttl_s": ...}); see repro.jobs.resolve_store.  With a
+    # store, submits are durable before admission, a restarted Runtime
+    # resumes incomplete work first, and several processes share one
+    # queue via leases.
+    store: Any = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -213,6 +221,17 @@ class Runtime:
         # pins no extra field state
         self._prepared: dict[str, PreparedRun] = {}
         self._next_sid = 0
+        from repro.jobs import resolve_store
+
+        self.store = resolve_store(self.config.store, self.config.ckpt_dir)
+        # job_ids this process admitted itself: a claim must never return
+        # our own job whose lease briefly expired (a long compile between
+        # heartbeats) — that would double-admit it locally
+        self._jobs_local: set[int] = set()
+        if self.store is not None:
+            # the restart contract: orphaned in-flight work resumes FIRST,
+            # before any claim() touches the queued backlog
+            self.recover()
 
     # -- resolution -----------------------------------------------------------
     @property
@@ -346,7 +365,8 @@ class Runtime:
                 check_steady_every=self.config.check_every,
                 mesh=self.mesh, slot_axis=self.config.slot_axis,
                 telemetry=self.telemetry, health=self.health,
-                farm_id=f"{cfg.case}/sig{len(self._services):03d}")
+                farm_id=f"{cfg.case}/sig{len(self._services):03d}",
+                store=self.store)
         except Exception as e:
             return None, f"{type(e).__name__}: {e}"
         self._services[key] = svc
@@ -379,12 +399,26 @@ class Runtime:
         self._scenario_of[sid] = sc.name
         svc, err = self._service_for(cfg)
         if svc is None:
+            if self.store is not None:
+                # even a sim whose stack cannot build leaves a durable
+                # audit row — submitted, failed, never silently dropped
+                from repro import jobs
+
+                jid = self.store.submit(
+                    req, signature=str(static_key(cfg, self.config.n_slots)),
+                    lease=True)
+                self.store.transition(jid, jobs.FAILED, error=err,
+                                      event="result")
+                self._jobs_local.add(jid)
             self._failed[sid] = SimResult(
                 sid=sid, tag=req.tag, steps_done=0, terminated="failed",
                 state={}, config=cfg, error=err)
             return sid
         inner = svc.submit(req)
         self._routes[sid] = (svc, inner)
+        jid = svc.job_of(inner)
+        if jid is not None:
+            self._jobs_local.add(jid)
         return sid
 
     def poll(self, sid: int) -> dict:
@@ -419,9 +453,161 @@ class Runtime:
         svc, inner = self._routes[sid]
         return svc.readmit(inner)
 
+    # -- durable jobs (repro.jobs) ---------------------------------------------
+    def _job_gauges(self):
+        if self.store is None or not self.telemetry.enabled:
+            return
+        self.telemetry.metrics.set("jobs.lease_takeovers",
+                                   self.store.takeovers)
+        self.telemetry.metrics.set("jobs.store_queue_depth",
+                                   self.store.queue_depth())
+
+    def _admit_job(self, job, resumed: bool = False) -> int:
+        """Admit one claimed store row into this process's farms,
+        resuming from its latest eviction snapshot when asked."""
+        from repro import jobs
+
+        req = job.request()
+        if resumed:
+            snap = self.store.latest_snapshot(job.job_id, "evict")
+            if snap is not None and snap["fields"]:
+                # resume pointer: re-enter a slot bitwise at the snapshot
+                steps_done, state = self.store.load_snapshot(job.job_id,
+                                                             "evict")
+                req = dataclasses.replace(req, init_state=state,
+                                          step0=steps_done)
+            # no snapshot: the job was claimed before ever reaching a
+            # spill point — it restarts from its payload (step0 intact)
+        sid = self._next_sid
+        self._next_sid += 1
+        self._jobs_local.add(job.job_id)
+        svc, err = self._service_for(req.config)
+        if svc is None:
+            self.store.transition(job.job_id, jobs.FAILED, error=err,
+                                  event="result")
+            self._failed[sid] = SimResult(
+                sid=sid, tag=req.tag, steps_done=0, terminated="failed",
+                state={}, config=req.config, error=err)
+            return sid
+        try:
+            inner = svc.submit(req, job_id=job.job_id)
+        except Exception as e:
+            # service.submit already transitioned the row to failed
+            self._failed[sid] = SimResult(
+                sid=sid, tag=req.tag, steps_done=0, terminated="failed",
+                state={}, config=req.config,
+                error=f"{type(e).__name__}: {e}")
+            return sid
+        self._routes[sid] = (svc, inner)
+        return sid
+
+    def enqueue(self, scenario, *, n: int | None = None,
+                steps: int | None = None, t_end: float | None = None,
+                tag: str = "", steady_tol: float | None = None,
+                residual_tol: float | None = None, priority: int = 0,
+                **params) -> int:
+        """Queue one simulation durably WITHOUT admitting it here;
+        returns its store job_id.  The detached half of ``submit``: any
+        process sharing the store — this one included — picks it up via
+        ``claim()``/``drain()``, so a front-end process can feed worker
+        processes through nothing but the store file."""
+        if self.store is None:
+            raise RuntimeError(
+                "enqueue() needs a job store — RuntimeConfig(store=...)")
+        sc = get_scenario(scenario)
+        builder_kw, ic_kw = sc.split_kwargs(params)
+        cfg = self.configure(sc, n=n, **builder_kw)
+        req = sc.request(
+            self.config.n if n is None else n, config=cfg,
+            steps=steps, t_end=t_end, tag=tag,
+            steady_tol=steady_tol, residual_tol=residual_tol,
+            priority=priority, **ic_kw)
+        job_id = self.store.submit(
+            req, signature=str(static_key(cfg, self.config.n_slots)),
+            lease=False)
+        if self.telemetry.enabled:
+            self.telemetry.trace.emit("job_enqueue", job_id=job_id, tag=tag)
+        self._job_gauges()
+        return job_id
+
+    def claim(self, max_jobs: int | None = None) -> list[int]:
+        """Lease up to ``max_jobs`` queued store jobs (default: one
+        farm's worth) and admit them locally; returns their sids.  Jobs
+        this process already admitted are never re-claimed, even if their
+        lease briefly lapsed."""
+        if self.store is None:
+            return []
+        limit = max_jobs if max_jobs is not None else self.config.n_slots
+        claimed = [j for j in self.store.claim(limit=limit)
+                   if j.job_id not in self._jobs_local]
+        sids = [self._admit_job(j) for j in claimed]
+        if self.telemetry.enabled:
+            for j in claimed:
+                self.telemetry.trace.emit("job_claim", job_id=j.job_id,
+                                          tag=j.tag)
+        self._job_gauges()
+        return sids
+
+    def recover(self, limit: int = 64) -> list[int]:
+        """Claim orphaned in-flight jobs (``running``/``evicted`` rows
+        with an expired lease — their process died) and readmit each from
+        its latest snapshot.  Runs automatically when a store-configured
+        Runtime is built, BEFORE any queued work is claimed — the
+        restart-resumes-incomplete-first contract."""
+        if self.store is None:
+            return []
+        claimed = [j for j in self.store.claim_incomplete(limit=limit)
+                   if j.job_id not in self._jobs_local]
+        sids = [self._admit_job(j, resumed=True) for j in claimed]
+        if self.telemetry.enabled:
+            if claimed:
+                self.telemetry.metrics.inc("jobs.resumed", len(claimed))
+            for j in claimed:
+                self.telemetry.trace.emit("job_resume", job_id=j.job_id,
+                                          tag=j.tag, status=j.status)
+        self._job_gauges()
+        return sids
+
+    def job_of(self, sid: int) -> int | None:
+        """The durable job_id behind a sid (None without a store)."""
+        if sid not in self._routes:
+            return None
+        svc, inner = self._routes[sid]
+        return svc.job_of(inner)
+
+    def jobs(self, status=None):
+        """Store job rows (optionally filtered by status)."""
+        if self.store is None:
+            return []
+        return self.store.jobs(status)
+
+    def load_result(self, job_id: int) -> dict:
+        """A done job's persisted final field state, from any process."""
+        if self.store is None:
+            raise RuntimeError("load_result() needs a job store")
+        return self.store.load_result(job_id)
+
+    def flight_record(self, job_id: int):
+        """The flight record of a diverged job, resolved through its
+        store registration — works after a process restart, when the
+        farm that recorded it is long gone."""
+        from repro.obs.health import load_flight_record
+
+        snap = (self.store.latest_snapshot(job_id, "flight")
+                if self.store is not None else None)
+        if snap is None:
+            raise KeyError(f"job {job_id} has no registered flight record")
+        return load_flight_record(snap["dir"], snap["step_key"])
+
     def drain(self, max_device_steps: int = 100_000) -> dict[int, SimResult]:
         """Run every farm dry; ALWAYS returns one result per submitted
-        sid, failed sims included (``terminated="failed"`` + error)."""
+        sid, failed sims included (``terminated="failed"`` + error).
+        With a job store, also keeps claiming queued store jobs until the
+        shared queue is empty (or every remaining job is leased by a live
+        peer), so ``drain`` on any worker drives the whole backlog."""
+        while self.store is not None and self.claim():
+            for svc in self._services.values():
+                svc.drain(max_device_steps)
         for svc in self._services.values():
             svc.drain(max_device_steps)
         out: dict[int, SimResult] = {}
@@ -521,7 +707,7 @@ def runtime(n: int = 32, *, backend: str = "jnp", mesh_shape: tuple = (),
             slot_axis: str = "slot", n_slots: int = 4,
             ckpt_dir: str | None = None, check_every: int = 16,
             nz: int | None = None, mesh: jax.sharding.Mesh | None = None,
-            telemetry: Any = False, health: Any = False,
+            telemetry: Any = False, health: Any = False, store: Any = None,
             **solver) -> Runtime:
     """Build a :class:`Runtime` — the one-call front door.
 
@@ -538,5 +724,5 @@ def runtime(n: int = 32, *, backend: str = "jnp", mesh_shape: tuple = (),
                         slot_axis=slot_axis, n_slots=n_slots,
                         ckpt_dir=ckpt_dir, check_every=check_every,
                         solver=dict(solver), telemetry=telemetry,
-                        health=health)
+                        health=health, store=store)
     return Runtime(cfg, mesh=mesh)

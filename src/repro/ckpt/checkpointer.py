@@ -38,12 +38,18 @@ def _flatten(tree):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int = 3,
+                 cleanup_max_age_s: float | None = 3600.0):
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
+        # startup sweep of crash debris, age-guarded so a directory shared
+        # by live processes never loses an in-flight .tmp-* write; None
+        # skips the sweep entirely
+        if cleanup_max_age_s is not None:
+            self.cleanup(max_age_s=cleanup_max_age_s)
 
     # -- paths ---------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
@@ -128,14 +134,40 @@ class Checkpointer:
 
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
-    def cleanup(self):
-        """Remove interrupted .tmp-* writes (crash debris)."""
+    def cleanup(self, max_age_s: float | None = None):
+        """Remove interrupted .tmp-* writes (crash debris).
+
+        ``max_age_s`` only removes debris whose mtime is at least that
+        old — the safe mode for directories shared by live processes
+        (another writer's in-flight tmp dir is seconds old, a crashed
+        write's is not).  ``None`` removes all debris unconditionally.
+        """
         import shutil
 
+        now = time.time()
         for name in os.listdir(self.dir):
-            if ".tmp-" in name:
-                shutil.rmtree(os.path.join(self.dir, name),
-                              ignore_errors=True)
+            if ".tmp-" not in name:
+                continue
+            path = os.path.join(self.dir, name)
+            if max_age_s is not None:
+                try:
+                    if now - os.path.getmtime(path) < max_age_s:
+                        continue
+                except OSError:
+                    continue
+            shutil.rmtree(path, ignore_errors=True)
+
+    def remove(self, step: int) -> bool:
+        """Drop one saved step's directory (terminal-state pruning for
+        the job store: a done/failed/diverged job's snapshots need not
+        outlive its row).  Returns whether anything was removed."""
+        import shutil
+
+        d = self._step_dir(step)
+        if not os.path.isdir(d):
+            return False
+        shutil.rmtree(d, ignore_errors=True)
+        return True
 
     # -- restore ---------------------------------------------------------------
     def read_arrays(self, step: int) -> tuple[dict, list[np.ndarray]]:

@@ -1,0 +1,97 @@
+"""Durable wire format for simulation requests.
+
+A :class:`~repro.sim.farm.SimRequest` splits into two halves with very
+different shapes: the *description* (the :class:`~repro.cfd.ns3d.CFDConfig`
+plus run knobs — small, structured, human-inspectable) and the optional
+*initial fields* (numpy arrays, potentially megabytes).  The store keeps
+the description as a JSON text column — queryable during incidents, exact
+float round-trip via ``repr``-based JSON numbers — and the fields as one
+npz blob, so a queued job survives a process crash byte-for-byte:
+``decode_request(*encode_request(req))`` rebuilds a request whose config
+compares equal and whose initial fields are bitwise the originals.
+
+``sid`` is deliberately NOT part of the payload: it is per-process farm
+bookkeeping, reassigned on every (re)admission, while the durable identity
+is the store's ``job_id``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+
+import numpy as np
+
+from repro.cfd.ns3d import CFDConfig
+
+PAYLOAD_VERSION = 1
+
+
+def config_to_dict(cfg: CFDConfig) -> dict:
+    """JSON-ready dict of a CFDConfig (tuples become lists)."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> CFDConfig:
+    """Rebuild a CFDConfig from its JSON form, restoring the tuple-typed
+    fields (``shape``/``forcing``/``decomposition``) that JSON flattened
+    to lists — a round-tripped config must compare ``==`` to the
+    original, and hashable tuples are part of the static signature."""
+    d = dict(d)
+    d["shape"] = tuple(int(x) for x in d["shape"])
+    d["forcing"] = tuple(float(x) for x in d["forcing"])
+    d["decomposition"] = tuple(
+        (int(axis), str(name)) for axis, name in d["decomposition"])
+    return CFDConfig(**d)
+
+
+def encode_request(req) -> tuple[str, bytes | None]:
+    """``(payload_json, init_npz)`` of a SimRequest.
+
+    ``init_npz`` is None when the request carries no initial fields (the
+    scenario ICs them in-solver); otherwise a compressed npz archive with
+    one entry per field.
+    """
+    payload = json.dumps({
+        "version": PAYLOAD_VERSION,
+        "config": config_to_dict(req.config),
+        "steps": req.steps,
+        "tag": req.tag,
+        "steady_tol": req.steady_tol,
+        "residual_tol": req.residual_tol,
+        "priority": req.priority,
+        "step0": req.step0,
+    }, sort_keys=True)
+    blob = None
+    if req.init_state is not None:
+        buf = io.BytesIO()
+        np.savez_compressed(
+            buf, **{k: np.asarray(v) for k, v in req.init_state.items()})
+        blob = buf.getvalue()
+    return payload, blob
+
+
+def decode_request(payload: str, init_npz: bytes | None = None):
+    """Rebuild the SimRequest a payload row describes (``sid=None`` —
+    the farm assigns a fresh one at submission)."""
+    from repro.sim.farm import SimRequest   # lazy: avoid import cycle
+
+    doc = json.loads(payload)
+    if doc.get("version") != PAYLOAD_VERSION:
+        raise ValueError(
+            f"unsupported job payload version {doc.get('version')!r} "
+            f"(this build reads {PAYLOAD_VERSION})")
+    init_state = None
+    if init_npz is not None:
+        with np.load(io.BytesIO(init_npz), allow_pickle=False) as data:
+            init_state = {k: np.asarray(data[k]) for k in data.files}
+    return SimRequest(
+        config=config_from_dict(doc["config"]),
+        steps=int(doc["steps"]),
+        tag=str(doc.get("tag", "")),
+        steady_tol=doc.get("steady_tol"),
+        residual_tol=doc.get("residual_tol"),
+        priority=int(doc.get("priority", 0)),
+        init_state=init_state,
+        step0=int(doc.get("step0", 0)),
+    )

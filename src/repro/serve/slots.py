@@ -100,6 +100,14 @@ class SlotTable:
     def n_queued(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def queued_items(self) -> Iterator[Any]:
+        """Every waiting item in admission order — priority levels high
+        to low, FIFO within a level: the order ``admit_next`` would pop
+        them.  A durable job store walks this to mirror the in-memory
+        queue without disturbing it."""
+        for prio in sorted(self._queues, reverse=True):
+            yield from self._queues[prio]
+
     def queue_depths(self) -> dict[int, int]:
         """Waiting-item count per priority level.  Every level that ever
         held work is reported (emptied levels at 0), so a gauge fed from

@@ -230,6 +230,12 @@ class SimulationFarm:
         self._live: set[int] = set()   # queued or resident sids
         self._submit_ts: dict[int, float] = {}   # sid -> submit wall time
         self.heartbeat = None          # service-installed: fn(chunk_wall_s)
+        # service-installed durable-store hook: fn(kind, req, result, **info)
+        # fired at admission ("running") and at every terminal resolution
+        # ("done"/"failed"/"diverged"), so each lifecycle transition lands
+        # in the job store right where the state change happens.  None (the
+        # default) keeps the in-memory path bitwise-untouched.
+        self.on_transition = None
 
     def _gauge_load(self):
         """Refresh the occupancy/queue-depth gauges (telemetry only)."""
@@ -303,6 +309,8 @@ class SimulationFarm:
                     # forever
                     self._fail(slot, entry, e)
                     continue
+                if self.on_transition is not None:
+                    self.on_transition("running", req, None)
                 if entry.steps_done >= req.steps:
                     # already at (or past) its target: harvest without
                     # stepping, so a steps=0 request never advances the
@@ -452,6 +460,9 @@ class SimulationFarm:
         self.monitor.release(req.sid)
         self.tel.metrics.inc("health.quarantines")
         self._resolved(req, entry.steps_done, "diverged", error=err)
+        if self.on_transition is not None:
+            self.on_transition("diverged", req, self.results[req.sid],
+                               flight_path=flight_path)
 
     def _check_steady(self, resid=None):
         if self.device_steps % self.check_steady_every:
@@ -488,6 +499,8 @@ class SimulationFarm:
         if self.monitor is not None:
             self.monitor.release(req.sid)
         self._resolved(req, entry.steps_done, reason)
+        if self.on_transition is not None:
+            self.on_transition("done", req, self.results[req.sid])
 
     def _fail(self, slot: int, entry: _SlotEntry, exc: BaseException):
         """Record a per-sim failure as a harvestable result and free the
@@ -504,6 +517,8 @@ class SimulationFarm:
         if self.monitor is not None:
             self.monitor.release(req.sid)
         self._resolved(req, entry.steps_done, "failed", error=err)
+        if self.on_transition is not None:
+            self.on_transition("failed", req, self.results[req.sid])
 
     def _resolved(self, req: SimRequest, steps_done: int, reason: str,
                   error: str | None = None):

@@ -29,7 +29,7 @@ from repro import obs
 from repro.cfd.ns3d import CFDConfig
 from repro.ckpt.checkpointer import Checkpointer
 from repro.ft.watchdog import Heartbeat, StepWatchdog
-from repro.sim.farm import SimRequest, SimResult, SimulationFarm
+from repro.sim.farm import SimRequest, SimResult, SimulationFarm, static_key
 
 
 @dataclasses.dataclass
@@ -45,7 +45,7 @@ class SimulationService:
     def __init__(self, base_config: CFDConfig, n_slots: int = 8,
                  ckpt_dir: str | None = None, check_steady_every: int = 16,
                  mesh=None, slot_axis: str = "data", telemetry=None,
-                 farm_id: str | None = None, health=None):
+                 farm_id: str | None = None, health=None, store=None):
         self.tel = obs.resolve(telemetry)
         self.farm = SimulationFarm(base_config, n_slots,
                                    check_steady_every=check_steady_every,
@@ -55,6 +55,9 @@ class SimulationService:
         self._evicted: dict[int, _Evicted] = {}
         self._requeued_progress: dict[int, int] = {}  # readmitted, waiting
         self._ckpt = Checkpointer(ckpt_dir, keep_last=0) if ckpt_dir else None
+        self.store = store               # repro.jobs.JobStore or None
+        self._job_of: dict[int, int] = {}  # farm sid -> durable job_id
+        self._last_renew = 0.0
         self._last_beat: float | None = None
         self._hb_file: Heartbeat | None = None
         self.watchdog: StepWatchdog | None = None
@@ -64,9 +67,14 @@ class SimulationService:
                 self._hb_file = Heartbeat(cfg.heartbeat_path,
                                           interval_s=cfg.heartbeat_interval_s)
             self.watchdog = StepWatchdog()
+        if self.tel.enabled or self.store is not None:
             # the farm beats on every step-chunk (with the chunk's wall
-            # time); poll/result beat with no observation
+            # time); poll/result beat with no observation.  The store
+            # rides the same beat for lease renewal — liveness is 'the
+            # farm is stepping', no renewal thread.
             self.farm.heartbeat = self._beat
+        if self.store is not None:
+            self.farm.on_transition = self._store_transition
 
     # -- watchdog --------------------------------------------------------------
     def _beat(self, chunk_wall_s: float | None = None):
@@ -77,6 +85,15 @@ class SimulationService:
         ``heartbeat_deadline_s`` — records a stall: the service was
         wedged (compile storm, device hang, host GC) between beats.
         """
+        if self.store is not None:
+            # rate-limited lease renewal: well inside the TTL, without a
+            # store transaction on every chunk
+            now_w = time.monotonic()
+            if now_w - self._last_renew >= self.store.ttl_s / 3:
+                self.store.renew()
+                self._last_renew = now_w
+        if not self.tel.enabled:
+            return
         now = time.perf_counter()
         last, self._last_beat = self._last_beat, now
         if self._hb_file is not None:
@@ -113,8 +130,82 @@ class SimulationService:
             monitor.mark(entry.req.sid, WARNING, cause=cause, **detail)
 
     # -- intake ---------------------------------------------------------------
-    def submit(self, req: SimRequest) -> int:
-        return self.farm.submit(req)
+    def submit(self, req: SimRequest, job_id: int | None = None) -> int:
+        """Queue a simulation; returns its sid.
+
+        With a job store configured the request is made durable FIRST —
+        committed as a ``queued`` row, leased to this process — and only
+        then admitted, so a crash between the two loses nothing (the row
+        is claimable).  ``job_id`` hands in an already-claimed store row
+        (the Runtime's claim/resume path) instead of inserting a new one.
+        A farm-side submit failure transitions the row to ``failed``
+        rather than leaving a leased orphan.
+        """
+        from repro import jobs
+
+        if self.store is not None and job_id is None:
+            job_id = self.store.submit(
+                req, signature=str(static_key(req.config, self.farm.n_slots)),
+                lease=True)
+        try:
+            sid = self.farm.submit(req)
+        except Exception as e:
+            if self.store is not None and job_id is not None:
+                self.store.transition(job_id, jobs.FAILED,
+                                      error=f"{type(e).__name__}: {e}",
+                                      event="result")
+            raise
+        if self.store is not None and job_id is not None:
+            self._job_of[sid] = job_id
+            if self.tel.enabled:
+                self.tel.trace.emit("job_submit", sid=sid, job_id=job_id,
+                                    tag=req.tag)
+        return sid
+
+    def job_of(self, sid: int) -> int | None:
+        """The durable job_id behind a farm sid (None without a store)."""
+        return self._job_of.get(sid)
+
+    # -- durable transitions ---------------------------------------------------
+    def _store_transition(self, kind: str, req: SimRequest, result, **info):
+        """Farm ``on_transition`` hook -> store rows, fired where the
+        state change happens: admission marks the job ``running``;
+        terminal resolutions persist the final field state (``result``
+        snapshot, done jobs), register the flight record (diverged jobs),
+        and transition the row — releasing the lease — in the same breath
+        as the in-memory result."""
+        from repro import jobs
+
+        job_id = self._job_of.get(req.sid)
+        if job_id is None:
+            return
+        if kind == "running":
+            self.store.transition(job_id, jobs.RUNNING,
+                                  steps_done=req.step0, event="admit")
+        elif kind == "done":
+            if self.store.keep_results:
+                with self.tel.section("service.result_snapshot"):
+                    self.store.save_snapshot(job_id, result.state,
+                                             result.steps_done, kind="result")
+            self.store.transition(job_id, jobs.DONE,
+                                  steps_done=result.steps_done,
+                                  terminated=result.terminated, event="result")
+        elif kind in ("failed", "diverged"):
+            if kind == "diverged" and info.get("flight_path"):
+                # the flight record is pruned with the job and resolvable
+                # from any process via the store row (dir + sid key)
+                self.store.record_snapshot(
+                    job_id, "flight", self.farm.flight.directory,
+                    step_key=req.sid, steps_done=result.steps_done)
+            self.store.transition(job_id, getattr(jobs, kind.upper()),
+                                  steps_done=result.steps_done,
+                                  terminated=result.terminated,
+                                  error=result.error, event="result")
+        if self.tel.enabled:
+            self.tel.trace.emit("job", sid=req.sid, job_id=job_id,
+                                transition=kind)
+            self.tel.metrics.set("jobs.store_queue_depth",
+                                 self.store.queue_depth())
 
     # -- status ---------------------------------------------------------------
     def poll(self, sid: int) -> dict:
@@ -130,7 +221,7 @@ class SimulationService:
         latest drained health frame under ``"health"`` (state, cause,
         step, div_linf, ke, umax, cfl, finite) — the streamed
         intermediate analysis."""
-        if self.tel.enabled:
+        if self.tel.enabled or self.store is not None:
             self._beat()
         if sid in self.farm.results:
             res = self.farm.results[sid]
@@ -191,7 +282,20 @@ class SimulationService:
         if pulled is None:
             return False
         req, state, steps_done = pulled
-        if self._ckpt is not None:
+        job_id = self._job_of.get(sid)
+        if self.store is not None and job_id is not None:
+            # durable spill: snapshot write + (status=evicted, resume
+            # pointer) land in one store transaction — a restarted process
+            # claims this job and resumes it from exactly here.  The
+            # legacy per-service spill directory is skipped: the store
+            # owns the bytes, keyed by the globally-unique job_id.
+            from repro import jobs
+
+            with self.tel.section("service.evict_spill"):
+                self.store.save_snapshot(job_id, state, steps_done,
+                                         kind="evict", status=jobs.EVICTED)
+            state = None
+        elif self._ckpt is not None:
             with self.tel.section("service.evict_spill"):
                 self._ckpt.save(sid, state, blocking=True)
             state = None
@@ -212,7 +316,11 @@ class SimulationService:
         if ev is None:
             return False
         state = ev.state
-        if state is None:
+        job_id = self._job_of.get(sid)
+        if state is None and self.store is not None and job_id is not None:
+            with self.tel.section("service.readmit_restore"):
+                _, state = self.store.load_snapshot(job_id, kind="evict")
+        elif state is None:
             with self.tel.section("service.readmit_restore"):
                 state = self._ckpt.restore(sid,
                                            self.farm.exec.state_template())

@@ -1,0 +1,560 @@
+"""repro.jobs: the durable job engine.
+
+Codec round-trips, store unit behaviour (leases, TTL takeover, threaded
+no-double-claim, terminal pruning), the store-off bitwise-invisibility
+contract, the durable lifecycle end-to-end (submit -> running -> done
+with a persisted result snapshot; evict/readmit through the store;
+flight-record registration resolving from a fresh process), the SIGKILL
+resume battery (restart resumes incomplete first, results bitwise
+against an uninterrupted run), and two workers draining one queue
+without double execution.
+"""
+import dataclasses
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import api, jobs
+from repro.ckpt.checkpointer import Checkpointer
+from repro.jobs import JobStore
+from repro.sim.farm import SimRequest
+from repro.sim.scenarios import get_scenario
+
+N = 12
+KW = dict(jacobi_iters=8)
+FIELDS = ("vx", "vy", "vz", "p")
+
+
+def _request(re=100.0, steps=8, **kw):
+    sc = get_scenario("cavity")
+    return sc.request(N, steps=steps, re=re,
+                      config=sc.config(N, re=re, **KW), **kw)
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+class TestCodec:
+    def test_config_round_trip_restores_tuples(self):
+        cfg = get_scenario("cavity").config(N, re=123.0, **KW)
+        cfg = dataclasses.replace(cfg, decomposition=((0, "shard"),))
+        back = jobs.config_from_dict(jobs.config_to_dict(cfg))
+        assert back == cfg
+        assert isinstance(back.shape, tuple)
+        assert isinstance(back.forcing, tuple)
+        assert back.decomposition == ((0, "shard"),)
+        hash(back.decomposition)   # static-signature members must hash
+
+    def test_request_round_trip_bitwise(self):
+        rng = np.random.default_rng(0)
+        init = {f: rng.standard_normal((N, N, N)).astype(np.float32)
+                for f in FIELDS}
+        req = _request(re=250.0, steps=17, tag="rt", steady_tol=1e-4,
+                       residual_tol=1e-3, priority=2)
+        req = dataclasses.replace(req, init_state=init, step0=5, sid=99)
+        back = jobs.decode_request(*jobs.encode_request(req))
+        assert back.config == req.config
+        assert (back.steps, back.tag, back.priority, back.step0) == \
+            (17, "rt", 2, 5)
+        assert back.steady_tol == req.steady_tol
+        assert back.residual_tol == req.residual_tol
+        assert back.sid is None        # sid is per-process, never durable
+        for f in FIELDS:
+            np.testing.assert_array_equal(back.init_state[f], init[f])
+            assert back.init_state[f].dtype == init[f].dtype
+
+    def test_no_init_state_encodes_no_blob(self):
+        payload, blob = jobs.encode_request(_request())
+        assert blob is None
+        assert jobs.decode_request(payload, None).init_state is None
+
+    def test_unknown_payload_version_rejected(self):
+        payload, _ = jobs.encode_request(_request())
+        bad = payload.replace(f'"version": {jobs.PAYLOAD_VERSION}',
+                              '"version": 999')
+        with pytest.raises(ValueError, match="payload version"):
+            jobs.decode_request(bad)
+
+
+# ---------------------------------------------------------------------------
+# store unit behaviour
+# ---------------------------------------------------------------------------
+class TestJobStore:
+    def test_submit_is_durable_and_claim_orders_priority_fifo(self, tmp_path):
+        st = JobStore(str(tmp_path / "j.sqlite"))
+        ids = [st.submit(_request(tag=t, **({"priority": p} if p else {})))
+               for t, p in (("a", 0), ("b", 1), ("c", 0))]
+        assert st.queue_depth() == 3
+        assert st.counts()["queued"] == 3
+        claimed = st.claim(limit=3)
+        # priority level first, FIFO within a level — admission order
+        assert [j.tag for j in claimed] == ["b", "a", "c"]
+        assert [j.job_id for j in claimed] == [ids[1], ids[0], ids[2]]
+        req = claimed[0].request()
+        assert req.tag == "b" and req.priority == 1
+
+    def test_live_lease_blocks_peers_expired_lease_takes_over(self, tmp_path):
+        path = str(tmp_path / "j.sqlite")
+        a = JobStore(path, ttl_s=0.4, owner="host:1:aaaaaa")
+        b = JobStore(path, ttl_s=30.0, owner="host:2:bbbbbb")
+        jid = a.submit(_request(tag="x"))
+        assert len(a.claim()) == 1
+        assert b.claim() == []                 # lease is live
+        assert b.lease_of(jid)["owner"] == a.owner
+        time.sleep(0.5)
+        got = b.claim()                        # a's lease expired -> takeover
+        assert [j.job_id for j in got] == [jid]
+        assert b.takeovers == 1 and a.takeovers == 0
+        assert b.lease_of(jid)["owner"] == b.owner
+        assert [e["event"] for e in b.events(jid)] == \
+            ["submit", "claim", "takeover"]
+
+    def test_renew_extends_release_frees(self, tmp_path):
+        st = JobStore(str(tmp_path / "j.sqlite"), ttl_s=30.0)
+        jid = st.submit(_request(), lease=True)   # service-path submit
+        before = st.lease_of(jid)["expires_at"]
+        time.sleep(0.05)
+        assert st.renew() == 1
+        assert st.lease_of(jid)["expires_at"] > before
+        assert st.release(jid)
+        assert st.lease_of(jid) is None
+
+    def test_terminal_transition_releases_lease_and_audits(self, tmp_path):
+        st = JobStore(str(tmp_path / "j.sqlite"))
+        jid = st.submit(_request(), lease=True)
+        st.transition(jid, jobs.RUNNING, steps_done=0, event="admit")
+        st.transition(jid, jobs.DONE, steps_done=8, terminated="steps",
+                      event="result")
+        job = st.get(jid)
+        assert job.status == jobs.DONE
+        assert (job.steps_done, job.terminated) == (8, "steps")
+        assert st.lease_of(jid) is None
+        assert [e["event"] for e in st.events(jid)] == \
+            ["submit", "admit", "result"]
+        with pytest.raises(ValueError, match="unknown job status"):
+            st.transition(jid, "bogus")
+
+    def test_no_double_claim_across_threads(self, tmp_path):
+        """Eight claimers hammering one file: BEGIN IMMEDIATE serializes
+        them — every job claimed exactly once, none lost."""
+        path = str(tmp_path / "j.sqlite")
+        seed = JobStore(path)
+        n_jobs = 24
+        for i in range(n_jobs):
+            seed.submit(_request(tag=f"t{i}"))
+        got: dict[str, list[int]] = {}
+
+        def worker(name):
+            st = JobStore(path, ttl_s=60.0, owner=f"host:{name}:x")
+            mine = []
+            while True:
+                batch = st.claim(limit=2)
+                if not batch:
+                    break
+                mine.extend(j.job_id for j in batch)
+            got[name] = mine
+
+        threads = [threading.Thread(target=worker, args=(str(i),))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        all_claimed = sorted(jid for m in got.values() for jid in m)
+        assert len(all_claimed) == n_jobs          # none double-claimed
+        assert len(set(all_claimed)) == n_jobs
+
+    def test_snapshot_round_trip_bitwise(self, tmp_path):
+        st = JobStore(str(tmp_path / "j.sqlite"))
+        jid = st.submit(_request())
+        rng = np.random.default_rng(1)
+        state = {f: rng.standard_normal((4, 4)).astype(np.float32)
+                 for f in FIELDS}
+        st.save_snapshot(jid, state, steps_done=7, kind="evict",
+                         status=jobs.EVICTED)
+        assert st.get(jid).status == jobs.EVICTED
+        steps, back = st.load_snapshot(jid, "evict")
+        assert steps == 7
+        assert set(back) == set(FIELDS)
+        for f in FIELDS:
+            np.testing.assert_array_equal(back[f], state[f])
+        # overwrite: latest pointer wins
+        state2 = {f: v + 1 for f, v in state.items()}
+        st.save_snapshot(jid, state2, steps_done=9, kind="evict")
+        steps, back = st.load_snapshot(jid, "evict")
+        assert steps == 9
+        np.testing.assert_array_equal(back["vx"], state2["vx"])
+
+    def test_prune_terminal_drops_rows_and_snapshot_dirs(self, tmp_path):
+        st = JobStore(str(tmp_path / "j.sqlite"))
+        state = {"vx": np.ones((3, 3), np.float32)}
+        done = st.submit(_request(tag="done"))
+        st.save_snapshot(done, state, 5, kind="result")
+        st.transition(done, jobs.DONE, event="result")
+        live = st.submit(_request(tag="live"))
+        st.save_snapshot(live, state, 3, kind="evict", status=jobs.EVICTED)
+        done_dir = os.path.join(st.snapshot_dir("result"),
+                                f"step_{done:08d}")
+        live_dir = os.path.join(st.snapshot_dir("evict"), f"step_{live:08d}")
+        assert os.path.isdir(done_dir) and os.path.isdir(live_dir)
+        assert st.prune_terminal(max_age_s=0.0) == 1
+        assert not os.path.isdir(done_dir)       # terminal dir removed
+        assert os.path.isdir(live_dir)           # incomplete job untouched
+        assert st.get(done) is None and st.events(done) == []
+        assert st.get(live).status == jobs.EVICTED
+        assert st.prune_terminal(0.0) == 0       # idempotent
+        # age guard: a fresh terminal row survives an aged prune
+        d2 = st.submit(_request())
+        st.transition(d2, jobs.FAILED, error="x", event="result")
+        assert st.prune_terminal(max_age_s=3600.0) == 0
+        assert st.get(d2) is not None
+
+    def test_opportunistic_prune_after_terminal_transition(self, tmp_path):
+        st = JobStore(str(tmp_path / "j.sqlite"), prune_after_s=0.0)
+        a = st.submit(_request())
+        st.transition(a, jobs.DONE, event="result")   # prunes itself
+        assert st.get(a) is None
+        assert st.counts()[jobs.DONE] == 0
+
+    def test_resolve_store_specs(self, tmp_path):
+        assert jobs.resolve_store(None) is None
+        assert jobs.resolve_store(False) is None
+        st = JobStore(str(tmp_path / "a.sqlite"))
+        assert jobs.resolve_store(st) is st
+        assert jobs.resolve_store(str(tmp_path / "b.sqlite")).path == \
+            str(tmp_path / "b.sqlite")
+        d = jobs.resolve_store({"path": str(tmp_path / "c.sqlite"),
+                                "ttl_s": 5.0})
+        assert d.ttl_s == 5.0
+        t = jobs.resolve_store(True, ckpt_dir=str(tmp_path))
+        assert t.path == str(tmp_path / "jobs.sqlite")
+        with pytest.raises(ValueError, match="needs ckpt_dir"):
+            jobs.resolve_store(True)
+        with pytest.raises(TypeError):
+            jobs.resolve_store(42)
+
+
+# ---------------------------------------------------------------------------
+# store-off is bitwise-invisible (the telemetry-off contract, again)
+# ---------------------------------------------------------------------------
+class TestStoreOffInvisible:
+    def test_farm_results_identical_store_on_vs_off(self, tmp_path):
+        runs = ((70.0, 9), (150.0, 14), (300.0, 7))
+
+        def run(store):
+            rt = api.runtime(n=N, n_slots=2, store=store, **KW)
+            sids = [rt.submit("cavity", re=re, steps=s) for re, s in runs]
+            out = rt.drain()
+            return [out[s] for s in sids]
+
+        on = run(str(tmp_path / "jobs.sqlite"))
+        off = run(None)
+        for a, b in zip(on, off):
+            assert a.steps_done == b.steps_done
+            assert a.terminated == b.terminated
+            for f in FIELDS:
+                np.testing.assert_array_equal(a.state[f], b.state[f])
+
+    def test_store_off_installs_no_hooks(self):
+        rt = api.runtime(n=N, n_slots=2, **KW)
+        assert rt.store is None
+        rt.submit("cavity", re=100.0, steps=2)
+        svc = rt.services()[0]
+        assert svc.store is None
+        assert svc.farm.on_transition is None
+        assert svc.farm.heartbeat is None      # telemetry off too
+        assert rt.claim() == [] and rt.recover() == []
+        with pytest.raises(RuntimeError, match="needs a job store"):
+            rt.enqueue("cavity", steps=2)
+
+
+# ---------------------------------------------------------------------------
+# durable lifecycle end-to-end (one process)
+# ---------------------------------------------------------------------------
+class TestDurableLifecycle:
+    def test_drain_persists_rows_and_result_snapshots(self, tmp_path):
+        rt = api.runtime(n=N, n_slots=2, telemetry=True,
+                         store=str(tmp_path / "jobs.sqlite"), **KW)
+        sids = [rt.submit("cavity", re=re, steps=6, tag=t)
+                for re, t in ((90.0, "a"), (180.0, "b"), (270.0, "c"))]
+        res = rt.drain()
+        st = rt.store
+        assert st.counts()[jobs.DONE] == 3 and st.queue_depth() == 0
+        for sid in sids:
+            jid = rt.job_of(sid)
+            job = st.get(jid)
+            assert job.status == jobs.DONE
+            assert job.steps_done == 6 and job.terminated == "steps"
+            assert st.lease_of(jid) is None
+            # the persisted result IS the in-memory result, bitwise
+            final = rt.load_result(jid)
+            for f in FIELDS:
+                np.testing.assert_array_equal(final[f],
+                                              np.asarray(res[sid].state[f]))
+            assert [e["event"] for e in st.events(jid, event="result")] \
+                and len(st.events(jid, event="result")) == 1
+        # lifecycle joined the trace + gauges
+        kinds = [e["kind"] for e in rt.telemetry.trace.events]
+        assert "job_submit" in kinds and "job" in kinds
+        assert rt.telemetry.metrics.get("jobs.store_queue_depth") == 0
+        assert "repro_jobs_store_queue_depth" in \
+            rt.services()[0].prometheus_text()
+
+    def test_farm_side_failure_lands_in_store(self, tmp_path):
+        rt = api.runtime(n=N, n_slots=2,
+                         store=str(tmp_path / "jobs.sqlite"), **KW)
+        good = rt.submit("cavity", re=100.0, steps=4, tag="good")
+        bad_sid = rt.submit("cavity", re=100.0, steps=4, tag="bad")
+        svc, inner = rt._routes[bad_sid]
+        # poison the queued request: mis-shaped fields raise at admission
+        for req in svc.farm.table.queued_items():
+            if req.sid == inner:
+                req.init_state = {f: np.zeros((2, 2), np.float32)
+                                  for f in FIELDS}
+        rt.drain()
+        assert rt.poll(bad_sid)["status"] == "failed"
+        bj = rt.store.get(rt.job_of(bad_sid))
+        assert bj.status == jobs.FAILED and bj.error
+        assert rt.store.get(rt.job_of(good)).status == jobs.DONE
+
+    def test_evict_readmit_via_store_is_bitwise(self, tmp_path):
+        def run(store, interrupt):
+            rt = api.runtime(n=N, n_slots=1, store=store, **KW)
+            sid = rt.submit("cavity", re=140.0, steps=10)
+            if interrupt:
+                rt.services()[0].run(4)
+                assert rt.evict(sid)
+                jid = rt.job_of(sid)
+                snap = rt.store.latest_snapshot(jid, "evict")
+                assert snap["steps_done"] == 4
+                assert set(FIELDS) <= set(snap["fields"])
+                assert rt.store.get(jid).status == jobs.EVICTED
+            return rt.drain()[sid]
+
+        smooth = run(None, interrupt=False)
+        bumpy = run(str(tmp_path / "jobs.sqlite"), interrupt=True)
+        assert bumpy.steps_done == smooth.steps_done == 10
+        for f in FIELDS:
+            np.testing.assert_array_equal(bumpy.state[f], smooth.state[f])
+
+    def test_flight_record_registered_and_resolves_from_fresh_process(
+            self, tmp_path):
+        store_path = str(tmp_path / "jobs.sqlite")
+        rt = api.runtime(n=N, n_slots=2, check_every=8, health=True,
+                         ckpt_dir=str(tmp_path / "ck"),
+                         store=store_path, **KW)
+        ok = rt.submit("cavity", re=100.0, steps=16, tag="ok")
+        bad = rt.submit("cavity", re=100.0, steps=16, dt=50.0, tag="poison")
+        rt.drain()
+        assert rt.poll(bad)["status"] == "diverged"
+        jid = rt.job_of(bad)
+        job = rt.store.get(jid)
+        assert job.status == jobs.DIVERGED and "flight record" in job.error
+        assert rt.store.get(rt.job_of(ok)).status == jobs.DONE
+        # a FRESH runtime on the same store — the recording farm is gone,
+        # sids were reassigned — still resolves the flight record
+        rt2 = api.runtime(n=N, n_slots=2, store=store_path, **KW)
+        rec = rt2.flight_record(jid)
+        assert {"frames", "state", "meta"} <= set(rec)
+        assert rec["meta"]["tag"] == "poison"
+        # and pruning removes the registered flight dir with the job
+        snap = rt2.store.latest_snapshot(jid, "flight")
+        flight_dir = os.path.join(snap["dir"], f"step_{snap['step_key']:08d}")
+        assert os.path.isdir(flight_dir)
+        rt2.store.prune_terminal(0.0)
+        assert not os.path.isdir(flight_dir)
+        with pytest.raises(KeyError):
+            rt2.flight_record(jid)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL resume battery (subprocess)
+# ---------------------------------------------------------------------------
+_KILL_SCRIPT = textwrap.dedent("""\
+    import os, signal
+    from repro import api
+
+    rt = api.runtime(n={n}, n_slots=2, jacobi_iters=8,
+                     store={{"path": {store!r}, "ttl_s": 1.0}})
+    sids = [rt.submit("cavity", re=re, steps=12, tag=tag)
+            for re, tag in ((80.0, "a"), (160.0, "b"), (240.0, "c"))]
+    rt.enqueue("cavity", re=320.0, steps=12, tag="d")
+    svc = rt.services()[0]
+    svc.run(4)                     # a, b at step 4; c queued; d detached
+    assert rt.evict(sids[0])       # a spills a durable resume pointer
+    svc.run(2)                     # b keeps going; c admitted into a's slot
+    print("READY", flush=True)
+    os.kill(os.getpid(), signal.SIGKILL)
+""")
+
+
+class TestSigkillResume:
+    @pytest.fixture(scope="class")
+    def killed_store(self, tmp_path_factory):
+        """A job store orphaned by a SIGKILLed farm process: one evicted
+        sim with a snapshot, two mid-run (their in-memory progress dies
+        with the process), one detached enqueue."""
+        tmp = tmp_path_factory.mktemp("kill")
+        store_path = str(tmp / "jobs.sqlite")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-c",
+             _KILL_SCRIPT.format(n=N, store=store_path)],
+            env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+            capture_output=True, text=True, timeout=600)
+        assert "READY" in proc.stdout, proc.stderr
+        assert proc.returncode == -signal.SIGKILL
+        return store_path
+
+    def test_store_shows_the_orphaned_state(self, killed_store):
+        st = JobStore(killed_store)
+        by_tag = {j.tag: j for j in st.jobs()}
+        assert by_tag["a"].status == jobs.EVICTED
+        assert st.latest_snapshot(by_tag["a"].job_id)["steps_done"] == 4
+        assert by_tag["b"].status == jobs.RUNNING
+        assert by_tag["c"].status == jobs.RUNNING   # took a's freed slot
+        assert by_tag["d"].status == jobs.QUEUED
+        assert st.lease_of(by_tag["d"].job_id) is None   # detached enqueue
+
+    def test_restart_resumes_incomplete_first_and_matches_bitwise(
+            self, killed_store):
+        time.sleep(1.2)            # let the dead process's leases expire
+        st_probe = JobStore(killed_store)
+        jobs_by_tag = {j.tag: j.job_id for j in st_probe.jobs()}
+        seq0 = st_probe.last_seq()
+
+        rt = api.runtime(n=N, n_slots=2, telemetry=True,
+                         store={"path": killed_store, "ttl_s": 30.0}, **KW)
+        # __init__ already ran recover(): incomplete (a, b, c) are
+        # claimed BEFORE any queued work
+        incomplete = {jobs_by_tag[t] for t in ("a", "b", "c")}
+        assert incomplete <= rt._jobs_local
+        assert jobs_by_tag["d"] not in rt._jobs_local
+        rt.drain()
+
+        st = rt.store
+        assert st.counts()[jobs.DONE] == 4 and st.queue_depth() == 0
+        # resume-first ordering, from the audit log: every claim of an
+        # incomplete job precedes every claim of a queued one
+        claims = [e for e in st.events(after_seq=seq0)
+                  if e["event"] in ("claim", "takeover")
+                  and e["owner"] == st.owner]
+        seq_of = {e["job_id"]: e["seq"] for e in claims}
+        assert max(seq_of[j] for j in incomplete) < \
+            seq_of[jobs_by_tag["d"]]
+        # the dead owner's leases were taken over, and it shows in metrics
+        assert st.takeovers >= len(incomplete)
+        assert rt.telemetry.metrics.get("jobs.resumed") == 3
+        assert rt.telemetry.metrics.get("jobs.lease_takeovers") == \
+            st.takeovers
+        # exactly one execution per job: one terminal result event each
+        for tag, jid in jobs_by_tag.items():
+            assert len(st.events(jid, event="result")) == 1, tag
+
+        # bitwise parity: interrupted-and-resumed == never interrupted
+        ref = api.runtime(n=N, n_slots=2, **KW)
+        ref_sids = {tag: ref.submit("cavity", re=re, steps=12, tag=tag)
+                    for re, tag in ((80.0, "a"), (160.0, "b"),
+                                    (240.0, "c"), (320.0, "d"))}
+        ref_res = ref.drain()
+        for tag, jid in jobs_by_tag.items():
+            final = st.load_result(jid)
+            expect = ref_res[ref_sids[tag]].state
+            for f in FIELDS:
+                np.testing.assert_array_equal(
+                    final[f], np.asarray(expect[f]),
+                    err_msg=f"job {tag} field {f}")
+
+
+# ---------------------------------------------------------------------------
+# two workers, one queue
+# ---------------------------------------------------------------------------
+class TestTwoWorkers:
+    def test_shared_queue_drains_without_double_execution(self, tmp_path):
+        path = str(tmp_path / "jobs.sqlite")
+        stA = JobStore(path, ttl_s=60.0, owner="host:1:worker-a")
+        stB = JobStore(path, ttl_s=60.0, owner="host:1:worker-b")
+        rtA = api.runtime(n=N, n_slots=2, store=stA, **KW)
+        rtB = api.runtime(n=N, n_slots=2, store=stB, **KW)
+        jids = [rtA.enqueue("cavity", re=80.0 + 40 * i, steps=6, tag=f"t{i}")
+                for i in range(4)]
+        sA = rtA.claim(2)
+        sB = rtB.claim(2)
+        assert len(sA) == 2 and len(sB) == 2
+        rtA.drain()
+        rtB.drain()
+        st = JobStore(path, owner="host:1:auditor")
+        assert st.counts()[jobs.DONE] == 4
+        assert stA.takeovers == 0 and stB.takeovers == 0
+        for jid in jids:
+            evs = st.events(jid)
+            assert len([e for e in evs if e["event"] == "result"]) == 1
+            # one worker owned the whole lifecycle — no tug-of-war
+            owners = {e["owner"] for e in evs
+                      if e["event"] in ("claim", "admit", "result")}
+            assert len(owners) == 1
+            assert st.load_result(jid)["vx"].shape[:2] == (N, N)
+        # claimed sets are disjoint across workers
+        claimed_by = {
+            w: {e["job_id"] for jid in jids for e in st.events(jid, "claim")
+                if (w in e["owner"])} for w in ("worker-a", "worker-b")}
+        assert not (claimed_by["worker-a"] & claimed_by["worker-b"])
+
+    def test_ttl_takeover_from_a_dead_claimer(self, tmp_path):
+        path = str(tmp_path / "jobs.sqlite")
+        wstore = JobStore(path, ttl_s=60.0, owner="host:1:live")
+        rt = api.runtime(n=N, n_slots=2, store=wstore, **KW)
+        jid = rt.enqueue("cavity", re=110.0, steps=4, tag="stolen")
+        dead = JobStore(path, ttl_s=0.4, owner="host:2:dead")
+        assert len(dead.claim()) == 1      # claims, then "crashes"
+        assert rt.claim() == []            # lease still live: hands off
+        time.sleep(0.5)
+        sids = rt.claim()
+        assert len(sids) == 1
+        assert wstore.takeovers == 1
+        assert any(e["event"] == "takeover" and e["owner"] == wstore.owner
+                   for e in wstore.events(jid))
+        rt.drain()
+        assert wstore.get(jid).status == jobs.DONE
+
+
+# ---------------------------------------------------------------------------
+# checkpointer satellites
+# ---------------------------------------------------------------------------
+class TestCheckpointerSatellites:
+    def _plant_debris(self, d, name, age_s):
+        path = os.path.join(d, name)
+        os.makedirs(path)
+        old = time.time() - age_s
+        os.utime(path, (old, old))
+        return path
+
+    def test_startup_cleanup_is_age_guarded(self, tmp_path):
+        d = str(tmp_path / "ck")
+        os.makedirs(d)
+        stale = self._plant_debris(d, "step_00000003.tmp-dead", 7200.0)
+        fresh = self._plant_debris(d, "step_00000004.tmp-live", 1.0)
+        Checkpointer(d)                     # default: sweep >1h-old debris
+        assert not os.path.isdir(stale)
+        assert os.path.isdir(fresh)         # a live writer's tmp survives
+        Checkpointer(d, cleanup_max_age_s=None)   # opt out: no sweep
+        assert os.path.isdir(fresh)
+
+    def test_cleanup_all_and_remove(self, tmp_path):
+        d = str(tmp_path / "ck")
+        ck = Checkpointer(d, keep_last=0)
+        self._plant_debris(d, "step_00000001.tmp-x", 1.0)
+        ck.cleanup()                        # unguarded: removes everything
+        assert os.listdir(d) == []
+        ck.save(5, {"a": np.arange(3)}, blocking=True)
+        assert ck.steps() == [5]
+        assert ck.remove(5) is True
+        assert ck.steps() == [] and ck.remove(5) is False

@@ -418,3 +418,61 @@ class TestHealthOverheadGate:
         assert 0.0 < a["modeled_overhead"] <= 0.03
         assert a["hbm_bytes_diag_per_chunk"] > 0
         assert compare(_health_doc(a), None)["passed"]
+
+
+# ---------------------------------------------------------------------------
+# durability-smoke gate: kill-and-resume invariants, baseline-free
+# ---------------------------------------------------------------------------
+def _durability_doc(**over):
+    m = {"jobs": 4, "killed": True, "orphaned_ok": True,
+         "incomplete_at_restart": 3, "resumed": 3, "resumed_first": True,
+         "lease_takeovers": 3, "single_execution": True, "all_done": True,
+         "parity_ok": True,
+         "store_counts": {"queued": 0, "running": 0, "evicted": 0,
+                          "done": 4, "failed": 0, "diverged": 0}}
+    m.update(over)
+    return {"schema": obs.BENCH_SCHEMA, "bench": "durability_smoke",
+            "passed": True,
+            "host": {"backend": "cpu", "device_count": 1},
+            "metrics": m}
+
+
+class TestDurabilitySmokeGate:
+    def test_clean_doc_passes_without_baseline(self):
+        v = compare(_durability_doc(), None)
+        assert v["passed"], v["failures"]
+
+    def test_not_killed_fails(self):
+        v = compare(_durability_doc(killed=False), None)
+        assert not v["passed"]
+        assert any("SIGKILLed" in f for f in v["failures"])
+
+    def test_no_resume_fails(self):
+        v = compare(_durability_doc(resumed=0), None)
+        assert not v["passed"]
+        assert any("resumed no" in f for f in v["failures"])
+
+    def test_queued_before_incomplete_fails(self):
+        v = compare(_durability_doc(resumed_first=False), None)
+        assert not v["passed"]
+        assert any("resume-first" in f for f in v["failures"])
+
+    def test_double_execution_fails(self):
+        v = compare(_durability_doc(single_execution=False), None)
+        assert not v["passed"]
+        assert any("double execution" in f for f in v["failures"])
+
+    def test_undrained_queue_fails(self):
+        v = compare(_durability_doc(all_done=False), None)
+        assert not v["passed"]
+        assert any("drain" in f for f in v["failures"])
+
+    def test_parity_break_fails(self):
+        v = compare(_durability_doc(parity_ok=False), None)
+        assert not v["passed"]
+        assert any("bitwise" in f for f in v["failures"])
+
+    def test_other_smokes_skip_this_gate(self):
+        # keys on the bench name: a plain smoke doc with none of these
+        # metrics must not trip the durability invariants
+        assert compare(_bench_doc(), None)["passed"]
